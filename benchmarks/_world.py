@@ -1,0 +1,39 @@
+"""Shared simulated worlds for the benchmark suite (built once, reused)."""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                            SpotMarket, SPSQueryService)
+
+
+@functools.lru_cache(maxsize=4)
+def market(seed: int = 42, n_regions: int = 2, profile: str = "aws") -> SpotMarket:
+    return SpotMarket(Catalog(seed=seed, n_regions=n_regions), seed=seed,
+                      profile=profile)
+
+
+@functools.lru_cache(maxsize=4)
+def collected(seed: int = 42, n_targets: int = 80, cycles: int = 40,
+              mode: str = "usqs"):
+    """(market, collector) with `cycles` collection rounds done."""
+    mkt = market(seed)
+    svc = SPSQueryService(mkt, n_accounts=3000)
+    step = max(len(mkt.pool_keys) // n_targets, 1)
+    targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[::step]][:n_targets]
+    col = DataCollector(svc, targets, CollectorConfig(mode=mode))
+    col.run(cycles)
+    return mkt, col
+
+
+def timer():
+    import time
+    t0 = time.perf_counter()
+    return lambda: (time.perf_counter() - t0) * 1e6  # microseconds
+
+
+def row(name: str, us: float, **derived) -> str:
+    payload = ";".join(f"{k}={v}" for k, v in derived.items())
+    return f"{name},{us:.1f},{payload}"

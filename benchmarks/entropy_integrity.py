@@ -1,0 +1,21 @@
+"""§3.1.1: entropy of the T3 distribution over the USQS grid (2.5052 bits)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import empirical_entropy, max_entropy
+
+from ._world import market, row, timer
+
+
+def run() -> list[str]:
+    t = timer()
+    mkt = market()
+    t3s = [mkt.t3_true(it.name, r, az) for (it, r, az) in mkt.pool_keys]
+    snapped = np.clip(np.round(np.array(t3s) / 5) * 5, 0, 50)
+    h = empirical_entropy(snapped)
+    hmax = max_entropy(11)
+    return [row("entropy/t3_grid", t(),
+                bits=round(h, 4), paper_bits=2.5052,
+                uniform_max=round(hmax, 4),
+                well_below_max=h < hmax - 0.3)]

@@ -1,0 +1,120 @@
+"""Figs. 18/19: SpotVista vs SpotVerse and vs SpotFleet-style strategies.
+
+Protocol (paper §6.4, compressed): each system picks one instance pool for a
+fixed resource target; we then run the Wu-et-al probing experiment on the
+pick (periodic multi-node requests over a horizon) and report cost + measured
+availability.  Single-type-per-pick to match SpotVerse's methodology.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cloudsim import probe_real_availability
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.core.baselines import naive_single_point, spotfleet_select, spotverse_select
+
+from ._world import collected, row, timer
+
+NODES = 24          # multi-node request sized to the contended-pool regime
+HORIZON = 1440.0
+
+
+N_WINDOWS = 6       # staggered 8h apart — covers the daily capacity cycle,
+                    # which is what defeats instantaneous-signal strategies
+
+
+def run() -> list[str]:
+    t = timer()
+    # pattern-based scoring needs the archive to span the daily cycle
+    # (paper: 7-day windows); 160 USQS cycles ≈ 27h of collection
+    mkt, col = collected(seed=42, n_targets=80, cycles=160)
+    cands = col.to_candidate_set()
+    # Contended regime (the paper's Fig-1 finding: NO type sustains a 50-node
+    # allocation): keep pools whose *true* capacity crosses the request size
+    # during the day — the realistic multi-node regime where strategies
+    # differ.  Uncontended pools trivially satisfy every strategy and carry
+    # no signal.  (Ground truth used only for experiment design, mirroring
+    # the paper's deliberate selection of 127 types across the availability
+    # spectrum; the strategies themselves see only their own signals.)
+    ts = mkt.now + np.arange(0.0, 1440.0, 60.0)
+    pool_idx = np.array([mkt.pool_index[(n, r, a)] for n, r, a in
+                         zip(cands.names, cands.regions, cands.azs)])
+    caps = np.stack([mkt.capacity(tt, pool_idx) for tt in ts])      # (T, K)
+    sel = np.flatnonzero((caps.max(0) >= NODES) & (caps.min(0) < NODES))
+    cands = cands.take(sel)
+    eng = RecommendationEngine()
+    out = []
+    names = ["spotvista_W0.0", "spotvista_W0.5", "spotvista_W1.0",
+             "spotverse_T4", "spotverse_T6", "spotfleet_LP", "spotfleet_CO",
+             "spotfleet_PCO", "naive_sps", "naive_t3"]
+    acc = {n: {"avail": [], "cost": [], "picks": []} for n in names}
+
+    for win in range(N_WINDOWS):
+        t0 = mkt.now
+        # instantaneous vendor signals AT WINDOW START (baselines); SpotVista
+        # scores from the trailing collected archive (pattern-based)
+        sps_now = np.array([mkt.sps(n, r, a, 1, t=t0) or 1
+                            for n, r, a in zip(cands.names, cands.regions, cands.azs)])
+        t3_now = np.array([mkt.t3_true(n, r, a, t=t0)
+                           for n, r, a in zip(cands.names, cands.regions, cands.azs)])
+        if_now = np.array([mkt.interruption_free_score(n, r, t=t0)
+                           for n, r in zip(cands.names, cands.regions)])
+        picks = {}
+        for w in (0.0, 0.5, 1.0):
+            comb, _, _ = eng.score(cands, ResourceRequest(cpus=NODES * 4.0, weight=w))
+            picks[f"spotvista_W{w}"] = int(np.argmax(comb))
+        picks["spotverse_T4"] = spotverse_select(sps_now, if_now, cands.prices, 4).index
+        picks["spotverse_T6"] = spotverse_select(sps_now, if_now, cands.prices, 6).index
+        picks["spotfleet_LP"] = spotfleet_select("lowest-price", cands.prices, t3_now).index
+        picks["spotfleet_CO"] = spotfleet_select("capacity-optimized", cands.prices, t3_now).index
+        picks["spotfleet_PCO"] = spotfleet_select("price-capacity-optimized",
+                                                  cands.prices, t3_now).index
+        picks["naive_sps"] = naive_single_point(sps_now, cands.prices).index
+        picks["naive_t3"] = naive_single_point(t3_now, cands.prices).index
+
+        # Wu-et-al probing across the 8h window: a request for NODES nodes
+        # succeeds iff free capacity covers it (capacity(t) is deterministic,
+        # so every strategy is scored on the identical market trajectory).
+        ts = t0 + np.arange(0.0, 8 * 60.0, 45.0)
+        for name, idx in picks.items():
+            pool_i = mkt.pool_index[(cands.names[idx], cands.regions[idx],
+                                     cands.azs[idx])]
+            ok = [float(mkt.capacity(tt, np.array([pool_i]))[0]) >= NODES
+                  for tt in ts]
+            acc[name]["avail"].append(100.0 * np.mean(ok))
+            acc[name]["cost"].append(cands.prices[idx] * NODES)
+            acc[name]["picks"].append(cands.names[idx])
+        mkt.advance(t0 + 8 * 60.0)
+
+    results = {}
+    for name in names:
+        a = float(np.mean(acc[name]["avail"]))
+        c = float(np.mean(acc[name]["cost"]))
+        results[name] = (a, c)
+        out.append(row(f"fig18_19/{name}", t(),
+                       availability=round(a, 1), hourly_cost=round(c, 3),
+                       instance="|".join(sorted(set(acc[name]["picks"])))[:48]))
+
+    sv = results["spotvista_W0.5"]
+    out.append(row("fig18/claims_vs_spotverse", 0.0,
+                   avail_vs_T4=round(sv[0] - results["spotverse_T4"][0], 1),
+                   cost_vs_T4_pct=round(100 * (results["spotverse_T4"][1] - sv[1])
+                                        / max(results["spotverse_T4"][1], 1e-9), 1),
+                   avail_ge_T4=sv[0] >= results["spotverse_T4"][0]))
+    out.append(row("fig19/claims_vs_spotfleet", 0.0,
+                   avail_w1_vs_CO=round(results["spotvista_W1.0"][0]
+                                        - results["spotfleet_CO"][0], 1),
+                   cost_w0_vs_LP_pct=round(
+                       100 * (results["spotfleet_LP"][1]
+                              - results["spotvista_W0.0"][1])
+                       / max(results["spotfleet_LP"][1], 1e-9), 1),
+                   # paper's headline: at comparable availability, >25% savings
+                   avail_w05_vs_CO=round(results["spotvista_W0.5"][0]
+                                         - results["spotfleet_CO"][0], 1),
+                   savings_w05_vs_CO_pct=round(
+                       100 * (results["spotfleet_CO"][1]
+                              - results["spotvista_W0.5"][1])
+                       / max(results["spotfleet_CO"][1], 1e-9), 1),
+                   w1_ge_CO=results["spotvista_W1.0"][0]
+                   >= results["spotfleet_CO"][0] - 5.0))
+    return out

@@ -1,0 +1,37 @@
+"""Fig. 1: single-node SPS=3 does NOT predict multi-node allocation success.
+
+For instance types whose single-node SPS is 3, request n in {1..50} nodes and
+record the fraction of types with a successful allocation — the paper's
+motivating observation (success collapses as n grows).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ._world import market, row, timer
+
+
+def run() -> list[str]:
+    t = timer()
+    mkt = market()
+    # types with single-node SPS of 3 (sample across pools)
+    pools = [(it.name, r, az) for (it, r, az) in mkt.pool_keys[::5]
+             if mkt.sps(it.name, r, az, 1) == 3][:120]
+    counts = [1, 2, 5, 10, 20, 30, 40, 50]
+    out = []
+    fracs = {}
+    for n in counts:
+        ok = sum(mkt.request_spot(ty, r, az, n, launch=False)[0]
+                 for (ty, r, az) in pools)
+        fracs[n] = ok / max(len(pools), 1)
+    us = t()
+    for n in counts:
+        out.append(row(f"fig1/success_rate_n{n}", us / len(counts),
+                       fraction=round(fracs[n], 4), types=len(pools)))
+    # paper claim: monotone collapse; <50% success at n>=10; ~0 full success at 50
+    out.append(row("fig1/claim_collapse", 0.0,
+                   drop_1_to_50=round(fracs[1] - fracs[50], 4),
+                   below_half_at_10=fracs[10] < 0.75,
+                   monotone=all(fracs[a] >= fracs[b] - 0.05
+                                for a, b in zip(counts, counts[1:]))))
+    return out

@@ -1,0 +1,82 @@
+"""Fig. 4: query-overhead vs T3-error trade-off of the collection heuristics.
+
+Strategies (vs a Full Scan ground truth, same market timeline):
+- plain binary search (BS)
+- BS + caching + early stopping (e=4)   [TSTP]
+- USQS (1 query/cycle)
+- sequential scans with 10..50 queries/cycle (Fig. 4b)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.tstp import TSTPResult, find_transition_points
+from repro.core.usqs import T3Estimator, USQSSampler
+
+from ._world import market, row, timer
+
+
+def run() -> list[str]:
+    t = timer()
+    mkt = market(seed=21, n_regions=1)
+    pools = [(it.name, r, az) for (it, r, az) in mkt.pool_keys[::37]][:15]
+    cycles, period = 24, 10.0
+
+    stats = {k: {"err": [], "q": []} for k in
+             ("full", "bs", "bs_cache_es", "usqs", "seq10", "seq25")}
+    samplers = {p: USQSSampler() for p in pools}
+    estimators = {p: T3Estimator(USQSSampler().grid) for p in pools}
+    caches: dict = {}
+
+    t_now = mkt.now
+    for c in range(cycles):
+        for p in pools:
+            ty, r, az = p
+            q = lambda n: mkt.sps(ty, r, az, n, t=t_now)
+            truth = mkt.t3_true(ty, r, az, t=t_now)
+
+            res = find_transition_points(q, 1, 50)
+            stats["bs"]["err"].append(abs(res.t3 - truth))
+            stats["bs"]["q"].append(res.queries)
+
+            res = find_transition_points(q, 1, 50, cache=caches.get(p),
+                                         early_stop=4)
+            caches[p] = res
+            stats["bs_cache_es"]["err"].append(abs(res.t3 - truth))
+            stats["bs_cache_es"]["q"].append(res.queries)
+
+            tc = samplers[p].next_target()
+            estimators[p].observe(tc, q(tc), c)
+            stats["usqs"]["err"].append(abs(estimators[p].t3() - truth))
+            stats["usqs"]["q"].append(1)
+
+            for tag, k in (("seq10", 10), ("seq25", 25)):
+                step = max(50 // k, 1)
+                t3 = 0
+                nq = 0
+                for n in range(1, 51, step):
+                    nq += 1
+                    if q(n) == 3:
+                        t3 = n
+                stats[tag]["err"].append(abs(t3 - truth))
+                stats[tag]["q"].append(nq)
+        t_now += period
+
+    us = t() / max(cycles * len(pools), 1)
+    out = []
+    for k, v in stats.items():
+        if not v["err"]:
+            continue
+        out.append(row(f"fig4/{k}", us,
+                       mean_err=round(float(np.mean(v["err"])), 3),
+                       median_err=float(np.median(v["err"])),
+                       queries_per_cycle=round(float(np.mean(v["q"])), 2)))
+    # paper claims: BS ~12 q/cycle near-exact; cache+ES ~7 q, err<=~0.9+grid;
+    # USQS 1 q/cycle with modest error.
+    out.append(row("fig4/claims", 0.0,
+                   bs_exact=float(np.mean(stats["bs"]["err"])) < 0.5,
+                   cache_es_cheaper=np.mean(stats["bs_cache_es"]["q"])
+                   < np.mean(stats["bs"]["q"]),
+                   usqs_overhead_reduction=round(
+                       float(np.mean(stats["bs"]["q"])), 1)))
+    return out

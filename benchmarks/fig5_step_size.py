@@ -1,0 +1,42 @@
+"""Fig. 5: USQS step-size sensitivity — MAE(T_s) is a U-curve.
+
+Small T_s → long round-robin cycle → temporal staleness; large T_s → wide
+probe spacing misses transitions.  The paper selects T_s=5 from the minimum
+region (T_s=3-5).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.usqs import T3Estimator, USQSSampler
+
+from ._world import market, row, timer
+
+
+def run() -> list[str]:
+    t = timer()
+    mkt = market(seed=22, n_regions=1)
+    pools = [(it.name, r, az) for (it, r, az) in mkt.pool_keys[::41]][:12]
+    period = 10.0
+    cycles = 60
+    maes = {}
+    for ts in (1, 2, 3, 5, 10, 25, 50):
+        samplers = {p: USQSSampler(1 if ts == 1 else ts, 50, ts) for p in pools}
+        ests = {p: T3Estimator(samplers[p].grid) for p in pools}
+        errs = []
+        t_now = mkt.now
+        for c in range(cycles):
+            for p in pools:
+                ty, r, az = p
+                tc = samplers[p].next_target()
+                ests[p].observe(tc, mkt.sps(ty, r, az, tc, t=t_now), c)
+                errs.append(abs(ests[p].t3() - mkt.t3_true(ty, r, az, t=t_now)))
+            t_now += period
+        maes[ts] = float(np.mean(errs))
+    us = t() / len(maes)
+    out = [row(f"fig5/mae_ts{k}", us, mae=round(v, 3)) for k, v in maes.items()]
+    small, mid, large = maes[1], min(maes[3], maes[5]), maes[50]
+    out.append(row("fig5/claims", 0.0,
+                   u_curve=bool(mid <= small and mid <= large),
+                   best_region_ts=min(maes, key=maes.get)))
+    return out

@@ -1,0 +1,75 @@
+"""Figs. 7/9/10: size correlation, per-AZ spread, 24h sustain J-curve."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.cloudsim.catalog import SIZES
+
+from ._world import market, row, timer
+
+
+def run() -> list[str]:
+    t = timer()
+    mkt = market(seed=41, n_regions=2)
+    out = []
+
+    # ---- Fig 7: adjacent-size T3 correlation within a family ----
+    sizes = list(SIZES)
+    ts = np.arange(0, 3 * 1440, 120.0)
+    cors, smaller_higher, larger_higher, equal = [], 0, 0, 0
+    by_key = {}
+    for (it, r, az) in mkt.pool_keys:
+        by_key[(it.family, it.size, az)] = (it.name, r, az)
+    pairs = 0
+    for (fam, size, az), pool in list(by_key.items()):
+        i = sizes.index(size)
+        if i + 1 >= len(sizes):
+            continue
+        nxt = by_key.get((fam, sizes[i + 1], az))
+        if nxt is None or pairs >= 120:
+            continue
+        pairs += 1
+        a = np.array([mkt.t3_true(*pool, t=tt) for tt in ts], float)
+        b = np.array([mkt.t3_true(*nxt, t=tt) for tt in ts], float)
+        if a.std() > 0 and b.std() > 0:
+            cors.append(float(np.corrcoef(a, b)[0, 1]))
+        smaller_higher += int((a > b).mean() > 0.5)
+        larger_higher += int((b > a).mean() > 0.5)
+        equal += int((a == b).mean() >= 0.5)
+    pos_frac = float(np.mean([c > 0 for c in cors]))
+    out.append(row("fig7/size_correlation", t(),
+                   positive_frac=round(pos_frac, 3),
+                   paper_value=0.837,
+                   smaller_higher_frac=round(smaller_higher / max(pairs, 1), 3),
+                   larger_higher_frac=round(larger_higher / max(pairs, 1), 3),
+                   mostly_positive=pos_frac > 0.6))
+
+    # ---- Fig 9: max-min T3 spread across AZs per (type, region) ----
+    spreads = []
+    types_seen = {}
+    for (it, r, az) in mkt.pool_keys:
+        types_seen.setdefault((it.name, r), []).append(az)
+    for (name, r), azs in list(types_seen.items())[:300]:
+        vals = [mkt.t3_true(name, r, az) for az in azs]
+        if len(vals) > 1:
+            spreads.append(max(vals) - min(vals))
+    spreads = np.asarray(spreads)
+    out.append(row("fig9/az_spread", t(),
+                   frac_max_spread=round(float((spreads >= 45).mean()), 3),
+                   paper_value=0.36,
+                   median_spread=float(np.median(spreads))))
+
+    # ---- Fig 10: 24h sustain ratio vs initial T3 (J-curve) ----
+    t0, t1 = 0.0, 1440.0
+    buckets: dict[int, list[int]] = {}
+    for (it, r, az) in mkt.pool_keys[::3]:
+        a = mkt.t3_true(it.name, r, az, t=t0)
+        b = mkt.t3_true(it.name, r, az, t=t1)
+        buckets.setdefault(a // 10 * 10, []).append(int(a == b))
+    sustain = {k: float(np.mean(v)) for k, v in sorted(buckets.items()) if v}
+    mid_keys = [k for k in sustain if 10 <= k <= 40]
+    mid = float(np.mean([sustain[k] for k in mid_keys])) if mid_keys else 0.0
+    out.append(row("fig10/sustain_jcurve", t(),
+                   **{f"sustain_t3_{k}": round(v, 3) for k, v in sustain.items()},
+                   ceiling_effect=bool(sustain.get(50, 0) > mid)))
+    return out

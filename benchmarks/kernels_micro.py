@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: jnp reference timings on CPU + oracle agreement.
+
+Wall-clock here measures the *reference* implementations on the CPU host
+(interpret-mode Pallas timings are not meaningful performance numbers; the
+kernels' perf story lives in the §Roofline structural analysis).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.models.rwkv6 import wkv_chunked
+from repro.models.rglru import rglru_chunked
+
+from ._world import row
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    ks = jax.random.split(jax.random.key(0), 8)
+    out = []
+
+    B, S, H, D = 2, 256, 4, 32
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, scale=D ** -0.5))
+    out.append(row("kernels/attention_ref", _time(fa, q, k, v),
+                   shape=f"{B}x{S}x{H}x{D}"))
+
+    r = jax.random.normal(ks[3], (B, S, H, D), jnp.float32) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[4], (B, S, H, D)) - 2)
+    u = jax.random.normal(ks[5], (H, D)) * 0.3
+    s0 = jnp.zeros((B, H, D, D))
+    wkv_seq = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a))
+    wkv_chk = jax.jit(lambda *a: wkv_chunked(*a, 32))
+    t_seq = _time(wkv_seq, r, k.astype(jnp.float32), v.astype(jnp.float32), lw, u, s0)
+    t_chk = _time(wkv_chk, r, k.astype(jnp.float32), v.astype(jnp.float32), lw, u, s0)
+    out.append(row("kernels/wkv_sequential", t_seq, shape=f"{B}x{S}x{H}x{D}"))
+    out.append(row("kernels/wkv_chunked", t_chk,
+                   speedup_vs_seq=round(t_seq / max(t_chk, 1e-9), 2)))
+
+    R = 128
+    la = -jnp.exp(jax.random.normal(ks[6], (B, S, R)) - 1)
+    xi = jax.random.normal(ks[7], (B, S, R))
+    h0 = jnp.zeros((B, R))
+    rg_seq = jax.jit(lambda *a: ref.rglru_scan_ref(*a))
+    rg_chk = jax.jit(lambda *a: rglru_chunked(*a, 64))
+    t_seq = _time(rg_seq, la, xi, h0)
+    t_chk = _time(rg_chk, la, xi, h0)
+    out.append(row("kernels/rglru_sequential", t_seq, shape=f"{B}x{S}x{R}"))
+    out.append(row("kernels/rglru_chunked", t_chk,
+                   speedup_vs_seq=round(t_seq / max(t_chk, 1e-9), 2)))
+    return out

@@ -1,0 +1,37 @@
+"""§Roofline: report the three terms per (arch × shape) from saved artifacts.
+
+Reads experiments/roofline/*.json (produced by ``python -m repro.launch.roofline``
+or the perf pass); prints one CSV row per cell.  If artifacts are missing it
+reports which cells lack them rather than recomputing (the compile pass is a
+separate, heavier step).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from ._world import row
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+
+
+def run() -> list[str]:
+    out = []
+    if not ART.exists():
+        return [row("roofline/missing", 0.0,
+                    note="run 'python -m repro.launch.roofline' first")]
+    for p in sorted(ART.glob("*.json")):
+        d = json.loads(p.read_text())
+        dom = d["bottleneck"]
+        dom_s = d[f"{dom}_s"]
+        bound = max(d["compute_s"], d["memory_s"], d["collective_s"])
+        out.append(row(f"roofline/{d['arch']}__{d['shape']}", 0.0,
+                       compute_s=f"{d['compute_s']:.3e}",
+                       memory_s=f"{d['memory_s']:.3e}",
+                       collective_s=f"{d['collective_s']:.3e}",
+                       bottleneck=dom,
+                       roofline_fraction=round(d["compute_s"] / bound, 3) if bound else 0,
+                       useful_flops_ratio=round(d["useful_ratio"], 3)))
+    if not out:
+        out = [row("roofline/missing", 0.0, note="no artifacts yet")]
+    return out

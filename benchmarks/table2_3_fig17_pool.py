@@ -1,0 +1,59 @@
+"""Table 2 / Fig 17 / Table 3: pool diversity + greedy-vs-ILP comparison."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.core.pool import greedy_pool_vectorized, ilp_pool
+
+from ._world import collected, row, timer
+
+
+def run() -> list[str]:
+    t = timer()
+    mkt, col = collected(seed=42, n_targets=80, cycles=30)
+    cands = col.to_candidate_set()
+    eng = RecommendationEngine()
+    out = []
+
+    # ---- Table 2: diversity across request scales and candidate scopes ----
+    for scope_name, flt in (("category", {"categories": ["general", "compute"]}),
+                            ("family", {"families": ["m5", "c5", "r5"]}),
+                            ("all", {})):
+        sizes = []
+        for cpus in (80, 160, 320, 640):
+            try:
+                rec = eng.recommend(cands, ResourceRequest(cpus=float(cpus), **flt))
+                sizes.append(rec.num_types)
+            except ValueError:
+                continue
+        if sizes:
+            out.append(row(f"table2/{scope_name}", t(),
+                           min_types=min(sizes), med_types=int(np.median(sizes)),
+                           max_types=max(sizes),
+                           diversified=max(sizes) >= 1))
+
+    # ---- Fig 17: avg score vs pool diversification (marginal decline) ----
+    comb, avail, cost = eng.score(cands, ResourceRequest(cpus=320.0))
+    order = np.argsort(-comb)
+    means = [float(comb[order[:k]].mean()) for k in range(1, 9)]
+    out.append(row("fig17/score_decline", t(),
+                   **{f"avg_top{k+1}": round(m, 1) for k, m in enumerate(means)},
+                   marginal_decline=bool(means[0] - means[-1] < 0.5 * means[0])))
+
+    # ---- Table 3: greedy vs ILP across candidate-space scale ----
+    rng = np.random.default_rng(0)
+    for k in (200, 800, 3000):
+        scores = rng.uniform(1, 100, k)
+        cpus = rng.choice([2, 4, 8, 16, 32, 48, 64, 96], k).astype(float)
+        g = greedy_pool_vectorized(scores, cpus, 160.0)
+        ilp = ilp_pool(scores, cpus, 160.0, gamma=100.0, time_limit=60.0)
+        def vobj(res):
+            return float((res.scores * cpus[res.indices] * res.counts).sum())
+        out.append(row(f"table3/k{k}", t(),
+                       greedy_ms=round(g.solve_time_s * 1e3, 2),
+                       ilp_ms=round(ilp.solve_time_s * 1e3, 1),
+                       speedup=round(ilp.solve_time_s / max(g.solve_time_s, 1e-9), 0),
+                       greedy_score=round(vobj(g), 0), ilp_score=round(vobj(ilp), 0),
+                       gap_pct=round(100 * (vobj(ilp) - vobj(g)) / max(vobj(ilp), 1e-9), 2)))
+    return out

@@ -1,0 +1,115 @@
+"""The Fig. 3 *Data Collector*: periodic USQS/TSTP collection over all targets.
+
+Drives the paper's collection pipeline against the (rate-limited) SPS service:
+every ``period_min`` minutes each tracked (type, region, az) target is probed
+at the current USQS target count (or refreshed via TSTP for high-precision
+mode), and the reconstructed T3 estimate is appended to the archive.
+
+The archive doubles as the engine's history store: ``to_candidate_set``
+assembles the (K, T) T3 matrix + catalog attributes for the scoring window —
+the same role the paper's object storage + time-series DB play.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core.tstp import TSTPResult, find_transition_points
+from ..core.types import CandidateSet
+from ..core.usqs import T3Estimator, USQSSampler
+from .market import SpotMarket
+from .sps import SPSQueryService
+
+
+@dataclass
+class CollectorConfig:
+    period_min: float = 10.0
+    t_min: int = 5
+    t_max: int = 50
+    step: int = 5
+    mode: str = "usqs"            # "usqs" | "tstp" | "full"
+    tstp_early_stop: int = 4
+
+
+class DataCollector:
+    """Maintains per-target T3 archives via the configured query heuristic."""
+
+    def __init__(self, service: SPSQueryService, targets,
+                 config: CollectorConfig | None = None):
+        self.service = service
+        self.market: SpotMarket = service.market
+        self.targets = list(targets)               # [(type, region, az)]
+        self.cfg = config or CollectorConfig()
+        grid = np.arange(self.cfg.t_min, self.cfg.t_max + 1, self.cfg.step)
+        self._samplers = {t: USQSSampler(self.cfg.t_min, self.cfg.t_max, self.cfg.step)
+                          for t in self.targets}
+        self._estimators = {t: T3Estimator(grid) for t in self.targets}
+        self._tstp_cache: dict[tuple, TSTPResult] = {}
+        self.times: list[float] = []
+        self.t3_archive: dict[tuple, list[int]] = {t: [] for t in self.targets}
+        self.t2_archive: dict[tuple, list[int]] = {t: [] for t in self.targets}
+        self._tick = 0
+
+    # -- one collection cycle ------------------------------------------------
+
+    def collect_once(self) -> None:
+        self.times.append(self.market.now)
+        for tgt in self.targets:
+            ty, rg, az = tgt
+            if self.cfg.mode == "usqs":
+                tc = self._samplers[tgt].next_target()
+                sps = self.service.query(ty, rg, az, tc)
+                if sps is not None:   # azure-profile queries may be missing
+                    self._estimators[tgt].observe(tc, sps, self._tick)
+                self.t3_archive[tgt].append(self._estimators[tgt].t3())
+                self.t2_archive[tgt].append(-1)
+            elif self.cfg.mode == "tstp":
+                res = find_transition_points(
+                    lambda n: self.service.query(ty, rg, az, n) or 1,
+                    self.cfg.t_min, self.cfg.t_max,
+                    cache=self._tstp_cache.get(tgt),
+                    early_stop=self.cfg.tstp_early_stop)
+                self._tstp_cache[tgt] = res
+                self.t3_archive[tgt].append(res.t3)
+                self.t2_archive[tgt].append(res.t2)
+            else:  # full scan (ground truth; expensive)
+                t3 = t2 = 0
+                for n in range(self.cfg.t_min, self.cfg.t_max + 1):
+                    s = self.service.query(ty, rg, az, n)
+                    if s is not None and s >= 3:
+                        t3 = n
+                    if s is not None and s >= 2:
+                        t2 = n
+                self.t3_archive[tgt].append(t3)
+                self.t2_archive[tgt].append(t2)
+        self._tick += 1
+
+    def run(self, cycles: int) -> None:
+        for _ in range(cycles):
+            self.collect_once()
+            self.market.advance(self.market.now + self.cfg.period_min)
+
+    # -- archive -> engine candidate set --------------------------------------
+
+    def to_candidate_set(self, window: int | None = None) -> CandidateSet:
+        cat = self.market.catalog
+        names, regions, azs, fams, cats, vcpus, mems, prices, rows = \
+            [], [], [], [], [], [], [], [], []
+        for tgt in self.targets:
+            ty, rg, az = tgt
+            it = cat.get(ty)
+            series = np.asarray(self.t3_archive[tgt], np.float64)
+            if window is not None:
+                series = series[-window:]
+            names.append(ty); regions.append(rg); azs.append(az)
+            fams.append(it.family); cats.append(it.category)
+            vcpus.append(it.vcpus); mems.append(it.memory_gb)
+            prices.append(cat.spot_price(ty, rg))
+            rows.append(series)
+        return CandidateSet(
+            names=np.array(names), regions=np.array(regions), azs=np.array(azs),
+            families=np.array(fams), categories=np.array(cats),
+            vcpus=np.array(vcpus, np.float64), memory_gb=np.array(mems, np.float64),
+            prices=np.array(prices, np.float64), t3=np.stack(rows),
+        )

@@ -1,0 +1,60 @@
+"""Rate-limited SPS query service (paper §3: 50 distinct scenarios / 24h / account).
+
+Models the vendor-side constraint that makes USQS/TSTP necessary: each account
+may register at most ``scenario_limit`` *distinct* query scenarios per rolling
+24 hours, where a scenario is the full (type, region, az, node-count) tuple —
+"queries for the same configuration with different node counts are treated as
+separate requests".
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+from .market import SpotMarket, MINUTES_PER_DAY
+
+
+class QueryLimitExceeded(RuntimeError):
+    pass
+
+
+@dataclass
+class _Account:
+    name: str
+    scenarios: deque = field(default_factory=deque)  # (t, scenario_key)
+
+    def distinct_in_window(self, now: float) -> set:
+        while self.scenarios and self.scenarios[0][0] <= now - MINUTES_PER_DAY:
+            self.scenarios.popleft()
+        return {k for _, k in self.scenarios}
+
+
+class SPSQueryService:
+    """Front door to :meth:`SpotMarket.sps`, enforcing account scenario quotas."""
+
+    def __init__(self, market: SpotMarket, n_accounts: int = 66,
+                 scenario_limit: int = 50):
+        self.market = market
+        self.scenario_limit = scenario_limit
+        self.accounts = [_Account(f"acct-{i}") for i in range(n_accounts)]
+        self.total_queries = 0
+
+    def query(self, type_name: str, region: str, az: str, n: int) -> int | None:
+        """Route the query to any account with quota; raise if all exhausted."""
+        key = (type_name, region, az, n)
+        now = self.market.now
+        for acct in self.accounts:
+            seen = acct.distinct_in_window(now)
+            if key in seen or len(seen) < self.scenario_limit:
+                if key not in seen:
+                    acct.scenarios.append((now, key))
+                self.total_queries += 1
+                return self.market.sps(type_name, region, az, n)
+        raise QueryLimitExceeded(
+            f"all {len(self.accounts)} accounts exhausted their "
+            f"{self.scenario_limit}-scenario/24h quota")
+
+    def capacity_remaining(self) -> int:
+        now = self.market.now
+        return sum(self.scenario_limit - len(a.distinct_in_window(now))
+                   for a in self.accounts)

@@ -1,0 +1,1 @@
+from .base import ModelConfig, MoEConfig, MLAConfig, ShapeConfig, TrainConfig, SHAPES  # noqa: F401

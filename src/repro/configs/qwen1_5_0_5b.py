@@ -1,0 +1,9 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B] — dense, MHA (kv=16), QKV bias."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="qwen1.5-0.5b", family="dense",
+    num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16, head_dim=64,
+    d_ff=2816, vocab_size=151936,
+    qkv_bias=True, rope_theta=1e6, tie_embeddings=True,
+)

@@ -1,0 +1,75 @@
+"""Recommendation engine facade (paper §4 + Fig. 3's serverless handler path).
+
+Given a :class:`ResourceRequest` and a :class:`CandidateSet` (the T3 archive
+slice for the scoring window), the engine:
+
+1. applies the user's filters (region / AZ / family / category / type),
+2. computes availability (Eq. 3) + cost (Eq. 2) + combined (Eq. 4) scores in
+   one vectorised JAX evaluation over all surviving candidates,
+3. forms the heterogeneous pool with the greedy heuristic (Algorithm 1).
+
+This is the exact code path the public web service's FaaS handler would call.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from . import pool as pool_lib
+from . import scoring
+from .types import CandidateSet, Recommendation, ResourceRequest
+
+
+def _filter_mask(c: CandidateSet, req: ResourceRequest) -> np.ndarray:
+    mask = np.ones(len(c), bool)
+    for values, col in (
+        (req.regions, c.regions), (req.azs, c.azs), (req.families, c.families),
+        (req.categories, c.categories), (req.types, c.names),
+    ):
+        if values is not None:
+            mask &= np.isin(col, np.asarray(values))
+    return mask
+
+
+class RecommendationEngine:
+    """Stateless scoring + pool formation over a candidate archive slice."""
+
+    def __init__(self, *, use_vectorized_pool: bool = True):
+        self._use_vectorized = use_vectorized_pool
+
+    def score(self, cands: CandidateSet, req: ResourceRequest):
+        """Return (combined S, availability AS, cost CS) for all candidates."""
+        avail = np.asarray(scoring.availability_scores(cands.t3, req.lam))
+        cost = np.asarray(scoring.cost_scores(
+            cands.prices, req.capacity_of(cands), req.amount))
+        comb = np.asarray(scoring.combined_scores(avail, cost, req.weight))
+        return comb, avail, cost
+
+    def recommend(self, cands: CandidateSet, req: ResourceRequest) -> Recommendation:
+        mask = _filter_mask(cands, req)
+        if not mask.any():
+            raise ValueError("no candidates satisfy the request filters")
+        sub = cands.take(np.flatnonzero(mask))
+        comb, avail, cost = self.score(sub, req)
+
+        form = (pool_lib.greedy_pool_vectorized if self._use_vectorized
+                else pool_lib.greedy_pool)
+        result = form(comb, np.asarray(req.capacity_of(sub), np.float64), req.amount)
+        idx, counts = result.indices, result.counts
+        if req.max_types is not None and len(idx) > req.max_types:
+            # Keep the top-scoring max_types members, re-allocate proportionally.
+            keep = idx[:req.max_types]
+            s = comb[keep]
+            r = s / s.sum() * req.amount
+            counts = np.ceil(r / np.asarray(req.capacity_of(sub), np.float64)[keep]).astype(np.int64)
+            idx = keep
+        hourly = float((sub.prices[idx] * counts).sum())
+        return Recommendation(
+            names=sub.names[idx], regions=sub.regions[idx], azs=sub.azs[idx],
+            counts=counts, combined=comb[idx], availability=avail[idx],
+            cost=cost[idx], hourly_cost=hourly,
+            diagnostics={
+                "candidates_considered": int(mask.sum()),
+                "greedy_iterations": result.iterations,
+                "solve_time_s": result.solve_time_s,
+            },
+        )

@@ -1,0 +1,33 @@
+"""Entropy-based integrity assessment of the USQS sample stream (paper §3.1.1).
+
+H(X) = -sum p(x) log2 p(x) over the discrete outcomes observed at USQS query
+points.  Low entropy (paper: 2.5052 bits vs the 3.4594-bit uniform maximum
+over the 11-point support) certifies that SPS transitions are predictable
+enough for sparse sampling to capture them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def empirical_entropy(samples, support_size: int | None = None) -> float:
+    """Shannon entropy (bits) of the empirical distribution of `samples`."""
+    samples = np.asarray(samples)
+    _, counts = np.unique(samples, return_counts=True)
+    p = counts / counts.sum()
+    return float(-(p * np.log2(p)).sum())
+
+
+def max_entropy(support_size: int) -> float:
+    """Entropy of the uniform distribution over `support_size` outcomes."""
+    return float(np.log2(support_size))
+
+
+@jax.jit
+def entropy_bits(counts: jax.Array) -> jax.Array:
+    """Entropy (bits) from a histogram of outcome counts (jit-able)."""
+    counts = counts.astype(jnp.float32)
+    p = counts / jnp.maximum(counts.sum(), 1.0)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log2(jnp.where(p > 0, p, 1.0)), 0.0))

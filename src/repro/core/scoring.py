@@ -1,0 +1,133 @@
+"""SpotVista scoring: availability score (Eq. 3), cost score (Eq. 2), combined (Eq. 4).
+
+The scoring math is the paper's primary quantitative contribution.  It is
+implemented as vectorised JAX over a batch of candidate instances so the whole
+candidate space (tens of thousands of (type, az) pairs after region fan-out)
+scores in a single fused XLA computation.
+
+Inputs
+------
+t3 : (K, T) array — per-candidate T3 time-series over the observation window
+     (T3 = largest node count whose SPS is 3; see core/tstp.py).
+prices, cpus : (K,) arrays — catalog attributes.
+
+All component normalisations (A3 magnitude, slope m, volatility sigma) are
+MinMax across the candidate set, per §4.2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_LAMBDA = 0.1
+DEFAULT_WEIGHT = 0.5
+
+
+class AvailabilityComponents(NamedTuple):
+    """Intermediate quantities of Eq. 3 (useful for tests / benchmarks)."""
+
+    a3: jax.Array      # (K,) normalised magnitude (area under T3 curve)
+    slope: jax.Array   # (K,) normalised trend m_i
+    sigma: jax.Array   # (K,) normalised volatility sigma_i
+    score: jax.Array   # (K,) AS_i in [0, 110] (bounded by 100*(1+lambda))
+
+
+def _safe_minmax(x: jax.Array) -> jax.Array:
+    """MinMax over the candidate axis; constant vectors map to zeros."""
+    lo = jnp.min(x)
+    hi = jnp.max(x)
+    rng = hi - lo
+    return jnp.where(rng > 0, (x - lo) / jnp.where(rng > 0, rng, 1.0), jnp.zeros_like(x))
+
+
+def _regression_slopes(t3: jax.Array) -> jax.Array:
+    """Closed-form least-squares slope of each row against uniform time."""
+    T = t3.shape[-1]
+    t = jnp.arange(T, dtype=t3.dtype)
+    t_c = t - jnp.mean(t)
+    denom = jnp.sum(t_c * t_c)
+    y_c = t3 - jnp.mean(t3, axis=-1, keepdims=True)
+    return (y_c @ t_c) / denom
+
+
+@functools.partial(jax.jit, static_argnames=("return_components",))
+def availability_scores(
+    t3: jax.Array,
+    lam: float | jax.Array = DEFAULT_LAMBDA,
+    *,
+    return_components: bool = False,
+):
+    """Eq. 3: AS_i = 100 * A3_i * (1 + lam * (m_i - sigma_i)).
+
+    - A3_i   : area under the T3 curve (trapezoid), MinMax across candidates.
+    - m_i    : first-order linear-regression slope, MinMax across candidates.
+    - sigma_i: standard deviation of T3_i, MinMax across candidates.
+    """
+    t3 = jnp.asarray(t3, jnp.float32)
+    # Trapezoid area over a uniform grid == mean of interior-weighted samples.
+    w = jnp.ones(t3.shape[-1], jnp.float32).at[0].set(0.5).at[-1].set(0.5)
+    area = t3 @ w  # (K,)
+    a3 = _safe_minmax(area)
+    slope = _safe_minmax(_regression_slopes(t3))
+    sigma = _safe_minmax(jnp.std(t3, axis=-1))
+    score = 100.0 * a3 * (1.0 + lam * (slope - sigma))
+    score = jnp.clip(score, 0.0, None)
+    if return_components:
+        return AvailabilityComponents(a3, slope, sigma, score)
+    return score
+
+
+@jax.jit
+def cost_scores(prices: jax.Array, cpus: jax.Array, required_cpus: jax.Array) -> jax.Array:
+    """Eq. 2: CS_i = 100 * C_min / C_i with C_i = p_i * ceil(R_C / CPU_i).
+
+    Inverse min-scaling — deliberately *not* MinMax — so the score is
+    independent of the shape of the cost distribution (§4.1).
+    """
+    prices = jnp.asarray(prices, jnp.float32)
+    cpus = jnp.asarray(cpus, jnp.float32)
+    n = jnp.ceil(required_cpus / cpus)
+    total = prices * n
+    return 100.0 * jnp.min(total) / total
+
+
+def pool_costs(prices: jax.Array, cpus: jax.Array, required_cpus) -> jax.Array:
+    """Total cost C_i = p_i * ceil(R / CPU_i) for every candidate (helper)."""
+    prices = jnp.asarray(prices, jnp.float32)
+    n = jnp.ceil(jnp.asarray(required_cpus, jnp.float32) / jnp.asarray(cpus, jnp.float32))
+    return prices * n
+
+
+@jax.jit
+def combined_scores(avail: jax.Array, cost: jax.Array, weight: float | jax.Array = DEFAULT_WEIGHT) -> jax.Array:
+    """Eq. 4: S_i = W * AS_i + (1 - W) * CS_i."""
+    return weight * avail + (1.0 - weight) * cost
+
+
+# ---------------------------------------------------------------------------
+# NumPy reference oracle (used by hypothesis property tests).
+# ---------------------------------------------------------------------------
+
+def availability_scores_ref(t3: np.ndarray, lam: float = DEFAULT_LAMBDA) -> np.ndarray:
+    t3 = np.asarray(t3, np.float64)
+
+    def mm(x):
+        rng = x.max() - x.min()
+        return (x - x.min()) / rng if rng > 0 else np.zeros_like(x)
+
+    area = np.trapezoid(t3, axis=-1) if hasattr(np, "trapezoid") else np.trapz(t3, axis=-1)
+    a3 = mm(area)
+    T = t3.shape[-1]
+    t = np.arange(T) - (T - 1) / 2.0
+    slope = mm((t3 - t3.mean(-1, keepdims=True)) @ t / (t @ t))
+    sigma = mm(t3.std(-1))
+    return np.maximum(100.0 * a3 * (1.0 + lam * (slope - sigma)), 0.0)
+
+
+def cost_scores_ref(prices: np.ndarray, cpus: np.ndarray, required: float) -> np.ndarray:
+    total = np.asarray(prices, np.float64) * np.ceil(required / np.asarray(cpus, np.float64))
+    return 100.0 * total.min() / total

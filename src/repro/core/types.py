@@ -1,0 +1,84 @@
+"""Shared datatypes for the recommendation engine."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class CandidateSet:
+    """Flat arrays describing the candidate (instance type, region, az) space.
+
+    `t3` is the (K, T) matrix of T3 time-series over the scoring window — the
+    engine is agnostic to where it came from (live collector, object-store
+    archive, or the cloudsim simulator).
+    """
+
+    names: np.ndarray        # (K,) str — instance type names
+    regions: np.ndarray      # (K,) str
+    azs: np.ndarray          # (K,) str
+    families: np.ndarray     # (K,) str
+    categories: np.ndarray   # (K,) str
+    vcpus: np.ndarray        # (K,) float
+    memory_gb: np.ndarray    # (K,) float
+    prices: np.ndarray       # (K,) float — $/hr spot price
+    t3: np.ndarray           # (K, T) float — T3 history, most recent last
+
+    def __len__(self) -> int:
+        return len(self.names)
+
+    def take(self, idx) -> "CandidateSet":
+        idx = np.asarray(idx)
+        return CandidateSet(
+            names=self.names[idx], regions=self.regions[idx], azs=self.azs[idx],
+            families=self.families[idx], categories=self.categories[idx],
+            vcpus=self.vcpus[idx], memory_gb=self.memory_gb[idx],
+            prices=self.prices[idx], t3=self.t3[idx],
+        )
+
+
+@dataclass
+class ResourceRequest:
+    """User-facing request (§4: R_C cores or R_M memory + optional filters)."""
+
+    cpus: float | None = None
+    memory_gb: float | None = None
+    regions: list[str] | None = None
+    azs: list[str] | None = None
+    families: list[str] | None = None
+    categories: list[str] | None = None
+    types: list[str] | None = None
+    weight: float = 0.5            # W in Eq. 4
+    lam: float = 0.1               # lambda in Eq. 3
+    max_types: int | None = None   # cap on returned pool diversity
+
+    def __post_init__(self):
+        if (self.cpus is None) == (self.memory_gb is None):
+            raise ValueError("specify exactly one of cpus / memory_gb")
+
+    @property
+    def amount(self) -> float:
+        return self.cpus if self.cpus is not None else self.memory_gb
+
+    def capacity_of(self, cands: CandidateSet) -> np.ndarray:
+        return cands.vcpus if self.cpus is not None else cands.memory_gb
+
+
+@dataclass
+class Recommendation:
+    """Engine output: the heterogeneous pool plus per-candidate diagnostics."""
+
+    names: np.ndarray           # (M,) selected type names
+    regions: np.ndarray
+    azs: np.ndarray
+    counts: np.ndarray          # (M,) node counts
+    combined: np.ndarray        # (M,) S_i
+    availability: np.ndarray    # (M,) AS_i
+    cost: np.ndarray            # (M,) CS_i
+    hourly_cost: float          # $/hr of the recommended pool
+    diagnostics: dict = field(default_factory=dict)
+
+    @property
+    def num_types(self) -> int:
+        return len(self.names)

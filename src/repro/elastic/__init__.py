@@ -1,0 +1,1 @@
+from .cluster import ElasticConfig, Node, SpotElasticTrainer, StepEvent  # noqa: F401

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated under interpret=True on CPU).
+
+- flash_attention : causal GQA flash attention (online softmax, VMEM stats)
+- rwkv6_scan      : chunked WKV6 linear-attention scan (state in VMEM)
+- rglru_scan      : chunked RG-LRU diagonal recurrence (log-depth in-chunk)
+- moe_gmm         : grouped expert matmul on (E, C, D) capacity buffers
+
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+"""

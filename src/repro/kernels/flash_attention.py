@@ -1,0 +1,112 @@
+"""Pallas TPU flash attention (causal, GQA-aware).
+
+Grid: (batch × q-heads, num_q_blocks, num_kv_blocks) — the KV axis is the
+innermost (sequential) grid dimension; online-softmax statistics (m, l) and
+the output accumulator live in VMEM scratch across KV iterations.  K/V blocks
+for query head h are fetched from its KV group h // G via the BlockSpec index
+map, so GQA needs no materialised head replication.
+
+Block sizes default to (128, 128): MXU-aligned on the contraction (head_dim
+is 64/128/256 across the assigned archs — all lane-aligned multiples of 8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, block_q: int, block_k: int, seq_q: int,
+                  seq_k: int, causal: bool):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...]                                   # (block_q, d)
+    k = k_ref[...]                                   # (block_k, d)
+    v = v_ref[...]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= q_pos >= k_pos
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new) * mask
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1, keepdims=True)
+    acc_scr[...] = acc_scr[...] * corr + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[...] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, *, scale: float, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D) with H = KV * G.  Causal assumes
+    q and k cover the same positions (training / full prefill)."""
+    B, Sq, H, D = q.shape
+    _, Sk, KV, _ = k.shape
+    G = H // KV
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    nq = -(-Sq // bq)
+    nk = -(-Sk // bk)
+
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk, D)
+
+    def q_map(h, qi, ki):
+        return (h, qi, 0)
+
+    def kv_map(h, qi, ki):
+        return ((h // (KV * G)) * KV + (h % (KV * G)) // G, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, block_q=bq, block_k=bk,
+                          seq_q=Sq, seq_k=Sk, causal=causal),
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((None, bq, D), q_map),
+            pl.BlockSpec((None, bk, D), kv_map),
+            pl.BlockSpec((None, bk, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((None, bq, D), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m
+            pltpu.VMEM((bq, 1), jnp.float32),   # l
+            pltpu.VMEM((bq, D), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: MoE grouped expert matmul on dense capacity buffers.
+
+The dispatch layer (models/moe.py) scatters tokens into an (E, C, D) buffer;
+this kernel runs the per-expert gated MLP as MXU-tiled batched matmuls:
+
+    up:   silu(x @ w1) * (x @ w3)     (E, C, D) x (E, D, F) -> (E, C, F)
+    down: h @ w2                      (E, C, F) x (E, F, D) -> (E, C, D)
+
+Grid: (E, C/bc, F/bf) with a VMEM accumulator over the contraction tiles.
+With experts sharded over "model", each chip runs its local expert slice —
+the kernel is purely local compute between the EP all-to-alls.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_up_kernel(x_ref, w1_ref, w3_ref, o_ref, acc1, acc3, *, nd: int,
+                   d_total: int):
+    di = pl.program_id(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc1[...] = jnp.zeros_like(acc1)
+        acc3[...] = jnp.zeros_like(acc3)
+
+    x = x_ref[...]
+    w1, w3 = w1_ref[...], w3_ref[...]
+    # mask the contraction tail when D % block_d != 0 (padded blocks read as
+    # garbage/NaN; 0*NaN = NaN, so both operands must be zeroed)
+    bd = x.shape[1]
+    col = di * bd + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    x = jnp.where(col < d_total, x, 0)
+    wrow = di * bd + jax.lax.broadcasted_iota(jnp.int32, w1.shape, 0)
+    w1 = jnp.where(wrow < d_total, w1, 0)
+    w3 = jnp.where(wrow < d_total, w3, 0)
+    acc1[...] += jax.lax.dot_general(x, w1, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+    acc3[...] += jax.lax.dot_general(x, w3, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+
+    @pl.when(di == nd - 1)
+    def _emit():
+        o_ref[...] = (jax.nn.silu(acc1[...]) * acc3[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(x, w1, w3, *, block_c: int = 128, block_f: int = 256,
+            block_d: int = 512, interpret: bool = False):
+    """x: (E, C, D); w1/w3: (E, D, F) → silu(x@w1)*(x@w3): (E, C, F)."""
+    E, C, D = x.shape
+    F = w1.shape[-1]
+    bc, bf, bd = min(block_c, C), min(block_f, F), min(block_d, D)
+    nc, nf, nd = -(-C // bc), -(-F // bf), -(-D // bd)
+
+    return pl.pallas_call(
+        functools.partial(_gmm_up_kernel, nd=nd, d_total=D),
+        grid=(E, nc, nf, nd),
+        in_specs=[
+            pl.BlockSpec((None, bc, bd), lambda e, ci, fi, di: (e, ci, di)),
+            pl.BlockSpec((None, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+            pl.BlockSpec((None, bd, bf), lambda e, ci, fi, di: (e, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((None, bc, bf), lambda e, ci, fi, di: (e, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((E, C, F), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bf), jnp.float32),
+                        pltpu.VMEM((bc, bf), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w3)
+
+
+def _gmm_down_kernel(h_ref, w2_ref, o_ref, acc, *, nf: int, f_total: int):
+    fi = pl.program_id(3)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    h, w2 = h_ref[...], w2_ref[...]
+    bf = h.shape[1]
+    col = fi * bf + jax.lax.broadcasted_iota(jnp.int32, h.shape, 1)
+    h = jnp.where(col < f_total, h, 0)
+    wrow = fi * bf + jax.lax.broadcasted_iota(jnp.int32, w2.shape, 0)
+    w2 = jnp.where(wrow < f_total, w2, 0)
+    acc[...] += jax.lax.dot_general(h, w2, (((1,), (0,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(fi == nf - 1)
+    def _emit():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_d", "block_f",
+                                             "interpret"))
+def moe_gmm_down(h, w2, *, block_c: int = 128, block_d: int = 256,
+                 block_f: int = 512, interpret: bool = False):
+    """h: (E, C, F); w2: (E, F, D) → (E, C, D)."""
+    E, C, F = h.shape
+    D = w2.shape[-1]
+    bc, bd, bf = min(block_c, C), min(block_d, D), min(block_f, F)
+    nc, ndd, nf = -(-C // bc), -(-D // bd), -(-F // bf)
+
+    return pl.pallas_call(
+        functools.partial(_gmm_down_kernel, nf=nf, f_total=F),
+        grid=(E, nc, ndd, nf),
+        in_specs=[
+            pl.BlockSpec((None, bc, bf), lambda e, ci, di, fi: (e, ci, fi)),
+            pl.BlockSpec((None, bf, bd), lambda e, ci, di, fi: (e, fi, di)),
+        ],
+        out_specs=pl.BlockSpec((None, bc, bd), lambda e, ci, di, fi: (e, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((E, C, D), h.dtype),
+        scratch_shapes=[pltpu.VMEM((bc, bd), jnp.float32)],
+        interpret=interpret,
+    )(h, w2)

@@ -1,0 +1,46 @@
+"""Jit'd kernel wrappers with backend dispatch.
+
+On TPU the Mosaic kernels run natively; elsewhere (this CPU container) they
+execute under ``interpret=True`` — same kernel body, Python interpreter —
+which is how the allclose test suite validates them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import flash_attention as _fa
+from . import moe_gmm as _gmm
+from . import rglru_scan as _rg
+from . import rwkv6_scan as _wkv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, qpos=None, kpos=None, *, scale: float,
+                    causal: bool = True):
+    """q: (B, Sq, KV, G, D) (grouped) or (B, Sq, H, D); k/v: (B, Sk, KV, D)."""
+    if q.ndim == 5:
+        B, Sq, KV, G, D = q.shape
+        q = q.reshape(B, Sq, KV * G, D)
+    return _fa.flash_attention(q, k, v, scale=scale, causal=causal,
+                               interpret=_interpret())
+
+
+def rwkv6_scan(r, k, v, log_w, u, s0, *, chunk: int = 32):
+    return _wkv.rwkv6_scan(r, k, v, log_w, u, s0, chunk=chunk,
+                           interpret=_interpret())
+
+
+def rglru_scan(log_a, x_in, h0, *, chunk: int = 128):
+    return _rg.rglru_scan(log_a, x_in, h0, chunk=chunk, interpret=_interpret())
+
+
+def moe_gmm(x, w1, w3):
+    return _gmm.moe_gmm(x, w1, w3, interpret=_interpret())
+
+
+def moe_gmm_down(h, w2):
+    return _gmm.moe_gmm_down(h, w2, interpret=_interpret())

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True):
+    """q: (B, Sq, H, D); k/v: (B, Sk, KV, D)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(Sq)
+        kpos = jnp.arange(k.shape[1])
+        mask = qpos[:, None] >= kpos[None, :]
+        s = jnp.where(mask[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgc,bckd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(B, Sq, H, D)
+
+
+def rwkv6_scan_ref(r, k, v, log_w, u, s0):
+    """Sequential WKV6 recurrence (the definitional oracle).
+
+    r/k/v/log_w: (B, S, H, D); u: (H, D); s0: (B, H, D, D) fp32.
+    """
+    B, S, H, D = r.shape
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    lw = log_w.astype(jnp.float32)
+
+    def step(s, t):
+        rt, kt, vt, wt = r32[:, t], k32[:, t], v32[:, t], lw[:, t]
+        a = kt[..., :, None] * vt[..., None, :]          # (B,H,D,D)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[..., None] * a)
+        s = jnp.exp(wt)[..., None] * s + a
+        return s, out
+
+    s, outs = jax.lax.scan(step, s0, jnp.arange(S))
+    return outs.transpose(1, 0, 2, 3), s
+
+
+def rglru_scan_ref(log_a, x_in, h0):
+    """Sequential diagonal recurrence h_t = a_t h_{t-1} + x_t.
+
+    log_a/x_in: (B, S, R) fp32; h0: (B, R) fp32.
+    Returns (hs (B, S, R), h_last).
+    """
+    def step(h, t):
+        h = jnp.exp(log_a[:, t]) * h + x_in[:, t]
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0, jnp.arange(log_a.shape[1]))
+    return hs.transpose(1, 0, 2), h_last
+
+
+def moe_gmm_ref(x, w1, w3):
+    """Gated expert up-projection: silu(x@w1) * (x@w3).
+
+    x: (E, C, D); w1/w3: (E, D, F) → (E, C, F).
+    """
+    h1 = jnp.einsum("ecd,edf->ecf", x, w1)
+    h3 = jnp.einsum("ecd,edf->ecf", x, w3)
+    return jax.nn.silu(h1) * h3
+
+
+def moe_gmm_down_ref(h, w2):
+    """Expert down-projection: (E, C, F) x (E, F, D) → (E, C, D)."""
+    return jnp.einsum("ecf,efd->ecd", h, w2)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: chunked RG-LRU diagonal recurrence.
+
+Channels are independent, so the grid tiles (batch, channel-blocks) and runs
+chunks sequentially on the innermost axis with the (1, bR) hidden state in
+VMEM scratch.  Within a chunk the recurrence h_t = a_t h_{t-1} + x_t is
+evaluated by a log-depth Blelloch-style doubling on the (c, bR) tile —
+all VPU elementwise work, no MXU needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rglru_kernel(la_ref, xi_ref, h0_ref, o_ref, hT_ref, h_scr, *,
+                  chunk: int):
+    # grid = (B, nr, nc): chunks are the innermost (sequential) axis so the
+    # VMEM carry is coherent per (batch, channel-block) before moving on.
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[...]
+
+    la = la_ref[...]                                 # (c, bR) log decay <= 0
+    xi = xi_ref[...]
+    # fold carry into step 0: h_1 = a_1 h_0 + x_1
+    first = jax.lax.broadcasted_iota(jnp.int32, la.shape, 0) == 0
+    xi = xi + jnp.where(first, jnp.exp(la) * h_scr[...], 0.0)
+
+    # log-depth inclusive scan of the affine recurrence (a, x) composition
+    c = la.shape[0]
+    steps = max(1, (c - 1).bit_length())
+    row = jax.lax.broadcasted_iota(jnp.int32, la.shape, 0)
+    for d in range(steps):
+        off = 1 << d
+        la_sh = jnp.roll(la, off, 0)
+        xi_sh = jnp.roll(xi, off, 0)
+        valid = row >= off
+        xi = jnp.where(valid, jnp.exp(la) * xi_sh + xi, xi)
+        la = jnp.where(valid, la + la_sh, la)
+
+    o_ref[...] = xi
+    h_scr[...] = xi[-1:, :]
+
+    @pl.when(ci == nc - 1)
+    def _emit():
+        hT_ref[...] = h_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_r", "interpret"))
+def rglru_scan(log_a, x_in, h0, *, chunk: int = 128, block_r: int = 256,
+               interpret: bool = False):
+    """log_a/x_in: (B, S, R) fp32; h0: (B, R) fp32.
+    Returns (hs (B, S, R) fp32, h_last (B, R))."""
+    B, S, R = log_a.shape
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0)))
+    bR = min(block_r, R)
+    nr = -(-R // bR)
+
+    seq_map = lambda b, ri, ci: (b, ci, ri)
+    h_map = lambda b, ri, ci: (b, 0, ri)
+
+    hs, h_last = pl.pallas_call(
+        functools.partial(_rglru_kernel, chunk=c),
+        grid=(B, nr, nc),
+        in_specs=[
+            pl.BlockSpec((None, c, bR), seq_map),
+            pl.BlockSpec((None, c, bR), seq_map),
+            pl.BlockSpec((None, 1, bR), h_map),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, c, bR), seq_map),
+            pl.BlockSpec((None, 1, bR), h_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc * c, R), jnp.float32),
+            jax.ShapeDtypeStruct((B, 1, R), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, bR), jnp.float32)],
+        interpret=interpret,
+    )(log_a, x_in, h0[:, None, :])
+    return hs[:, :S], h_last[:, 0]

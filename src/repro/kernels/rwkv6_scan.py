@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: chunked WKV6 scan (RWKV6 linear attention).
+
+TPU adaptation of the per-token CUDA recurrence: the sequence is tiled into
+chunks; within a chunk the recurrence is evaluated in its quadratic matmul
+form (MXU work), and the (Dk, Dv) state is carried across chunks in VMEM
+scratch along the sequential chunk grid axis.
+
+Grid: (B × H, num_chunks).  Per-block working set @ chunk=32, D=64:
+r/k/v/w chunks 4 × 32×64×4B = 32 KiB, pairwise-decay tensor 32×32×64×4B =
+256 KiB, state 64×64×4B = 16 KiB — comfortably inside the ~16 MiB VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, o_ref, sT_ref,
+                s_scr, *, chunk: int):
+    ci = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_scr[...] = s0_ref[...].astype(jnp.float32)
+
+    r = r_ref[...].astype(jnp.float32)               # (c, D)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)               # log-decay, (c, D) <= 0
+    u = u_ref[...].astype(jnp.float32)               # (1, D)
+    s = s_scr[...]                                   # (Dk, Dv)
+
+    cw = jnp.cumsum(w, axis=0)                       # (c, D)
+    # inter-chunk: out_i += (r_i * exp(cw_{i-1})) @ s
+    r_dec = r * jnp.exp(cw - w)
+    inter = jax.lax.dot_general(r_dec, s, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    # intra-chunk: pairwise per-channel decay ratios (c_i, c_j, D)
+    expo = jnp.exp(jnp.clip((cw - w)[:, None, :] - cw[None, :, :], -60.0, 0.0))
+    att = jnp.einsum("id,ijd,jd->ij", r, expo, k,
+                     preferred_element_type=jnp.float32)
+    tri = jax.lax.broadcasted_iota(jnp.int32, att.shape, 0) > \
+        jax.lax.broadcasted_iota(jnp.int32, att.shape, 1)
+    att = att * tri
+    intra = jax.lax.dot_general(att, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    bonus = (r * u * k).sum(axis=1, keepdims=True) * v
+    o_ref[...] = (inter + intra + bonus).astype(o_ref.dtype)
+
+    # state update: s' = diag(exp(cw_c)) s + sum_j exp(cw_c - cw_j) k_j v_j^T
+    total = cw[-1:, :]                               # (1, D)
+    k_scaled = k * jnp.exp(total - cw)
+    s_scr[...] = jnp.exp(total.T) * s + jax.lax.dot_general(
+        k_scaled, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ci == nc - 1)
+    def _emit_state():
+        sT_ref[...] = s_scr[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, log_w, u, s0, *, chunk: int = 32,
+               interpret: bool = False):
+    """r/k/v: (B, S, H, D) bf16; log_w: (B, S, H, D) fp32; u: (H, D);
+    s0: (B, H, Dk, Dv) fp32.  Returns (out (B, S, H, D) fp32, s_final)."""
+    B, S, H, D = r.shape
+    c = min(chunk, S)
+    nc = -(-S // c)
+    pad = nc * c - S
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    flat = lambda a: a.transpose(0, 2, 1, 3).reshape(B * H, nc * c, D)
+    rf, kf, vf, wf = flat(r), flat(k), flat(v), flat(log_w)
+    uf = jnp.broadcast_to(u[None], (B, H, D)).reshape(B * H, 1, D)
+    s0f = s0.reshape(B * H, D, D)
+
+    seq_map = lambda bh, ci: (bh, ci, 0)
+    head_map = lambda bh, ci: (bh, 0, 0)
+    state_map = lambda bh, ci: (bh, 0, 0)
+
+    out, s_final = pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=c),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((None, c, D), seq_map),      # r
+            pl.BlockSpec((None, c, D), seq_map),      # k
+            pl.BlockSpec((None, c, D), seq_map),      # v
+            pl.BlockSpec((None, c, D), seq_map),      # w
+            pl.BlockSpec((None, 1, D), head_map),     # u
+            pl.BlockSpec((None, D, D), state_map),    # s0
+        ],
+        out_specs=[
+            pl.BlockSpec((None, c, D), seq_map),
+            pl.BlockSpec((None, D, D), state_map),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, nc * c, D), jnp.float32),
+            jax.ShapeDtypeStruct((B * H, D, D), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
+        interpret=interpret,
+    )(rf, kf, vf, wf, uf, s0f)
+    out = out.reshape(B, H, nc * c, D).transpose(0, 2, 1, 3)[:, :S]
+    return out, s_final.reshape(B, H, D, D)

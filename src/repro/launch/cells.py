@@ -1,0 +1,132 @@
+"""Cell builder: (arch × shape × mesh) → jit-able step + arg structs + shardings.
+
+Used by the dry-run (official scanned compile), the roofline pass (unrolled
+cost compiles), and the launch drivers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig, TrainConfig
+from ..models.api import Model, get_model
+from ..parallel import sharding as shd
+from ..train import step as step_lib
+from ..train import optim as optim_lib
+
+
+@dataclass
+class CellBuild:
+    fn: Callable
+    args: tuple                 # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    out_shardings: Any
+    model: Model
+    cfg: ModelConfig
+    tcfg: TrainConfig
+    meta: dict
+    donate: tuple = ()          # argnums donated (train state / decode cache)
+
+
+def pick_grad_accum(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Microbatch count so per-microbatch activation residency fits ~5 GiB.
+
+    Accounts for the three dominant per-microbatch terms:
+    - remat boundary residuals: (B/G, S, D) bf16 × units (SP-sharded),
+    - loss logits: (B/G, S, V/tp) bf16+fp32,
+    - attention score transients: (B/G, KV*Grp/tp?, S, chunk) fp32.
+    """
+    dp = shd.dp_size(mesh)
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if cfg.dp_only:
+        dp, tp = dp * tp, 1
+    b_loc = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+    sp = tp if (cfg.sp and S % tp == 0) else 1
+    units = max(cfg.num_units, 1)
+
+    boundary = b_loc * S * cfg.d_model * 2 * units // sp
+    v_loc = cfg.padded_vocab // tp if cfg.padded_vocab % tp == 0 else cfg.padded_vocab
+    logits = b_loc * S * v_loc * 6          # bf16 + fp32 copies
+    heads_sharded = cfg.padded_heads % tp == 0
+    h_loc = cfg.padded_heads // tp if heads_sharded else cfg.padded_heads
+    chunk = min(cfg.attn_chunk * 2, S)      # direct path threshold
+    scores = b_loc * h_loc * S * chunk * 4
+    # empirical fwd+bwd working-set multiplier over the modelled terms
+    # (calibrated against compiled temp_bytes on the hybrid/dense cells)
+    per_mb_at_g1 = int(3.5 * (boundary + logits + scores))
+
+    budget = 5 * 2 ** 30
+    g = int(min(max(1, -(-per_mb_at_g1 // budget)), b_loc))
+    while b_loc % g != 0:      # round up to the next divisor of b_loc
+        g += 1
+    return g
+
+
+def _replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               tcfg: TrainConfig | None = None, *,
+               grad_accum: int | None = None) -> CellBuild:
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    if cfg.dp_only:
+        tp = 1   # weights replicated: no TP padding/kv-replication needed
+    cfg = dataclasses.replace(cfg.with_parallelism(tp), mesh=mesh)
+    model = get_model(cfg)
+    pstructs = model.shape_structs()
+    pshard = shd.param_shardings(model.structure(), mesh, dp_only=cfg.dp_only)
+    inputs = model.input_specs(shape)
+    bshard = shd.batch_shardings(inputs, mesh, dp_only=cfg.dp_only)
+    meta = {"arch": cfg.arch_id, "shape": shape.name,
+            "mesh": dict(zip(mesh.axis_names, mesh.devices.shape)),
+            "num_params": model.num_params()}
+
+    if shape.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        ga = grad_accum if grad_accum is not None else pick_grad_accum(cfg, shape, mesh)
+        tcfg = dataclasses.replace(tcfg, grad_accum=ga)
+        meta["grad_accum"] = ga
+        state_structs = step_lib.TrainState(
+            params=pstructs, opt=optim_lib.opt_state_structs(pstructs, tcfg))
+        oshard = shd.opt_shardings(model.structure(), mesh, zero1=tcfg.zero1,
+                                   dp_only=cfg.dp_only)
+        state_shard = step_lib.TrainState(
+            params=pshard,
+            opt=optim_lib.OptState(mu=oshard, nu=oshard,
+                                   master=oshard if tcfg.master_weights else None,
+                                   count=_replicated(mesh)))
+        fn = step_lib.build_train_step(model, tcfg, grad_shardings=oshard)
+        return CellBuild(fn, (state_structs, inputs),
+                         (state_shard, bshard), (state_shard, _replicated(mesh)),
+                         model, cfg, tcfg, meta, donate=(0,))
+
+    if shape.kind == "prefill":
+        cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        cshard = shd.cache_shardings(cache, mesh)
+        fn = step_lib.build_prefill_step(model)
+        return CellBuild(fn, (pstructs, inputs, cache),
+                         (pshard, bshard, cshard), (None, cshard),
+                         model, cfg, tcfg or TrainConfig(), meta)
+
+    # decode: one new token against a seq_len-deep cache
+    cache = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    cshard = shd.cache_shardings(cache, mesh)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = step_lib.build_decode_step(model)
+    return CellBuild(fn, (pstructs, inputs["token"], cache, index),
+                     (pshard, bshard["token"], cshard, _replicated(mesh)),
+                     (None, cshard), model, cfg, tcfg or TrainConfig(), meta,
+                     donate=(2,))
+
+
+def lower_cell(cell: CellBuild):
+    return jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                   out_shardings=cell.out_shardings,
+                   donate_argnums=cell.donate).lower(*cell.args)

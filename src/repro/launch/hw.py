@@ -1,0 +1,5 @@
+"""Target hardware model: TPU v5e (per-chip)."""
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW_PER_LINK = 50e9        # bytes/s/link (~bidirectional per link)
+HBM_BYTES = 16 * 2**30        # 16 GiB

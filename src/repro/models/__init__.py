@@ -1,0 +1,3 @@
+"""Model zoo: assigned architectures as pattern-based functional models."""
+from .api import Model, get_model  # noqa: F401
+from .param import ParamSpec, init_params, shape_structs, axes_tree, count_params  # noqa: F401

@@ -1,0 +1,99 @@
+"""Model facade: family dispatch + input specs for every (arch x shape) cell."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeConfig
+from . import encdec, lm
+from .param import count_params, init_params, shape_structs
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- structure -----------------------------------------------------
+    def structure(self):
+        return (encdec if self.cfg.encdec else lm).structure(self.cfg)
+
+    def shape_structs(self):
+        return shape_structs(self.structure())
+
+    def init(self, key):
+        return init_params(self.structure(), key)
+
+    def num_params(self) -> int:
+        return count_params(self.structure())
+
+    def init_cache(self, batch: int, max_len: int):
+        return (encdec if self.cfg.encdec else lm).init_cache(self.cfg, batch, max_len)
+
+    # -- compute -------------------------------------------------------
+    def forward(self, params, batch, *, train=True):
+        """batch: dict from input_specs(kind='train').  Returns (logits, aux)."""
+        if self.cfg.encdec:
+            return encdec.forward(self.cfg, params, batch["tokens"],
+                                  batch["frames"], train=train)
+        return lm.forward(self.cfg, params, batch["tokens"],
+                          batch.get("prefix_embeds"), train=train)
+
+    def prefill(self, params, batch, cache):
+        if self.cfg.encdec:
+            return encdec.prefill(self.cfg, params, batch["tokens"],
+                                  batch["frames"], cache)
+        return lm.prefill(self.cfg, params, batch["tokens"], cache,
+                          batch.get("prefix_embeds"))
+
+    def decode_step(self, params, token, cache, index):
+        mod = encdec if self.cfg.encdec else lm
+        return mod.decode_step(self.cfg, params, token, cache, index)
+
+    # -- input specs (ShapeDtypeStruct stand-ins, no allocation) --------
+    def input_specs(self, shape: ShapeConfig) -> dict:
+        """Inputs for the given shape cell's step function.
+
+        Modality frontends are STUBS: vision/audio cells receive precomputed
+        patch/frame embeddings as inputs, per the task spec.
+        """
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        tok = lambda b, s: jax.ShapeDtypeStruct((b, s), jnp.int32)
+        emb = lambda b, s: jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+
+        if shape.kind == "train":
+            if cfg.encdec:
+                return {"tokens": tok(B, S), "labels": tok(B, S),
+                        "frames": emb(B, cfg.frontend_len)}
+            if cfg.frontend == "vision":
+                s_text = S - cfg.frontend_len
+                return {"tokens": tok(B, s_text), "labels": tok(B, s_text),
+                        "prefix_embeds": emb(B, cfg.frontend_len)}
+            return {"tokens": tok(B, S), "labels": tok(B, S)}
+        if shape.kind == "prefill":
+            if cfg.encdec:
+                return {"tokens": tok(B, S), "frames": emb(B, cfg.frontend_len)}
+            if cfg.frontend == "vision":
+                return {"tokens": tok(B, S - cfg.frontend_len),
+                        "prefix_embeds": emb(B, cfg.frontend_len)}
+            return {"tokens": tok(B, S)}
+        # decode: one new token against a seq_len-deep cache
+        return {"token": tok(B, 1)}
+
+    def realize_inputs(self, shape: ShapeConfig, key) -> dict:
+        """Concrete random inputs matching input_specs (smoke tests)."""
+        specs = self.input_specs(shape)
+        out = {}
+        for name, s in specs.items():
+            key, k = jax.random.split(key)
+            if s.dtype == jnp.int32:
+                out[name] = jax.random.randint(k, s.shape, 0, self.cfg.vocab_size, jnp.int32)
+            else:
+                out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+        return out
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

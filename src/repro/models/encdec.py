@@ -1,0 +1,166 @@
+"""Encoder-decoder assembly (SeamlessM4T backbone).
+
+Encoder: bidirectional attention over precomputed modality-frontend frame
+embeddings (the frontend itself is a stub per the task spec).  Decoder:
+causal self-attention + cross-attention over encoder output + MLP, scanned
+over layers like lm.py.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_lib
+from .layers import mlp_specs, rmsnorm, rmsnorm_spec, swiglu
+from .param import ParamSpec, is_spec
+from .lm import _stack, _logits
+
+
+def _enc_layer_specs(cfg: ModelConfig) -> dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "ln2": rmsnorm_spec(cfg.d_model),
+            "attn": attn_lib.gqa_specs(cfg),
+            "ffn": mlp_specs(cfg.d_model, cfg.d_ff)}
+
+
+def _dec_layer_specs(cfg: ModelConfig) -> dict:
+    return {"ln1": rmsnorm_spec(cfg.d_model), "ln2": rmsnorm_spec(cfg.d_model),
+            "ln3": rmsnorm_spec(cfg.d_model),
+            "self_attn": attn_lib.gqa_specs(cfg),
+            "cross_attn": attn_lib.gqa_specs(cfg, cross=True),
+            "ffn": mlp_specs(cfg.d_model, cfg.d_ff)}
+
+
+def structure(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    s: dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), fan_in_axes=(1,)),
+        "enc_norm": rmsnorm_spec(D),
+        "final_norm": rmsnorm_spec(D),
+        "enc_unit": _stack(_enc_layer_specs(cfg), cfg.enc_layers),
+        "dec_unit": _stack(_dec_layer_specs(cfg), cfg.num_layers),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((V, D), ("vocab", "embed"))
+    return s
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    L = cfg.num_layers
+    self_c = attn_lib.init_kv_cache(cfg, batch, max_len)
+    enc_len = cfg.frontend_len
+    cross_c = {"k": jnp.zeros((batch, enc_len, cfg.kv_heads_effective, cfg.head_dim), jnp.bfloat16),
+               "v": jnp.zeros((batch, enc_len, cfg.kv_heads_effective, cfg.head_dim), jnp.bfloat16)}
+    stack = lambda c: jax.tree.map(lambda x: jnp.broadcast_to(x[None], (L,) + x.shape), c)
+    return {"self": stack(self_c), "cross": stack(cross_c)}
+
+
+def encode(cfg: ModelConfig, params, frames, *, train=True):
+    """frames: (B, F, D) precomputed frontend embeddings."""
+    B, F, _ = frames.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32)[None], (B, F))
+    x = frames.astype(jnp.bfloat16)
+
+    def body(x, p):
+        h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+        mix, _ = attn_lib.apply_gqa(cfg, p["attn"], h, positions=positions,
+                                    causal=False)
+        x = x + mix
+        h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+        return x + swiglu(h, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"]), None
+
+    fn = body
+    if train and cfg.remat:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if not cfg.use_scan:
+        for u in range(cfg.enc_layers):
+            x, _ = fn(x, jax.tree.map(lambda a: a[u], params["enc_unit"]))
+    else:
+        x, _ = jax.lax.scan(fn, x, params["enc_unit"])
+    return rmsnorm(params["enc_norm"], x, cfg.rms_eps)
+
+
+def _dec_layer(cfg, p, x, positions, enc_out, self_c, cross_c, cache_index,
+               kv_valid, decode):
+    h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    mix, new_self = attn_lib.apply_gqa(cfg, p["self_attn"], h, positions=positions,
+                                       cache=self_c, cache_index=cache_index,
+                                       kv_valid=kv_valid)
+    x = x + mix
+    h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+    mix, new_cross = attn_lib.apply_gqa(
+        cfg, p["cross_attn"], h, positions=positions, cross=True,
+        kv_x=enc_out if not decode else None, cache=cross_c)
+    x = x + mix
+    h = rmsnorm(p["ln3"], x, cfg.rms_eps)
+    return x + swiglu(h, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"]), new_self, new_cross
+
+
+def decode_stack(cfg: ModelConfig, params, tokens, enc_out, caches=None,
+                 cache_index=None, kv_valid=None, *, decode=False, train=True):
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(jnp.bfloat16)
+    B, S = x.shape[0], x.shape[1]
+    if decode:
+        positions = jnp.broadcast_to(cache_index.astype(jnp.int32)[None, None], (B, 1))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    def body(x, xs):
+        p, self_c, cross_c = xs
+        x, new_self, new_cross = _dec_layer(cfg, p, x, positions, enc_out,
+                                            self_c, cross_c, cache_index,
+                                            kv_valid, decode)
+        return x, (new_self, new_cross)
+
+    fn = body
+    if train and cfg.remat:
+        fn = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if not cfg.use_scan:
+        selfs, crosses = [], []
+        for u in range(cfg.num_layers):
+            at = lambda a: jax.tree.map(lambda z: z[u], a)
+            x, (ns, ncr) = fn(x, (at(params["dec_unit"]),
+                                  at(caches["self"]) if caches else None,
+                                  at(caches["cross"]) if caches else None))
+            selfs.append(ns)
+            crosses.append(ncr)
+        new_caches = ({"self": jax.tree.map(lambda *z: jnp.stack(z), *selfs),
+                       "cross": jax.tree.map(lambda *z: jnp.stack(z), *crosses)}
+                      if caches else None)
+    elif caches is None:
+        def body_nc(x, p):
+            x, _ = fn((x), (p, None, None))
+            return x, None
+        x, _ = jax.lax.scan(body_nc, x, params["dec_unit"])
+        new_caches = None
+    else:
+        x, (new_self, new_cross) = jax.lax.scan(
+            fn, x, (params["dec_unit"], caches["self"], caches["cross"]))
+        new_caches = {"self": new_self, "cross": new_cross}
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return _logits(cfg, params, x), new_caches
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, *, train=True):
+    """Training forward: (B,S) text tokens + (B,F,D) frames → (logits, aux)."""
+    enc_out = encode(cfg, params, frames, train=train)
+    logits, _ = decode_stack(cfg, params, tokens, enc_out, train=train)
+    return logits, 0.0
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames, cache):
+    enc_out = encode(cfg, params, frames, train=False)
+    S = tokens.shape[1]
+    logits, new_cache = decode_stack(cfg, params, tokens, enc_out, cache,
+                                     cache_index=0, kv_valid=jnp.int32(S),
+                                     train=False)
+    return logits[:, -1:], new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, index):
+    logits, new_cache = decode_stack(cfg, params, token, None, cache,
+                                     cache_index=index, kv_valid=index + 1,
+                                     decode=True, train=False)
+    return logits, new_cache

@@ -1,0 +1,345 @@
+"""Decoder-only LM assembly: pattern-based layer stack, scan + remat, caches.
+
+Layer layout (general over all assigned archs):
+
+    prefix layers   — unrolled (e.g. deepseek's first dense layer)
+    scanned units   — `num_units` repeats of `block_pattern`, parameters
+                      stacked on a leading "layers" axis, executed with
+                      jax.lax.scan (+ jax.checkpoint for training) so the HLO
+                      stays one-unit-sized regardless of depth
+    suffix layers   — unrolled remainder (e.g. recurrentgemma's trailing 2)
+
+Each layer = pre-norm mixing block (attn | mla | rwkv | rglru) + pre-norm
+FFN block (dense MLP or MoE).  Caches/states mirror the params structure so
+the same scan threads (params, cache) pairs during serving.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import rglru as rglru_lib
+from . import rwkv6 as rwkv_lib
+from .layers import constrain, mlp_specs, rmsnorm, rmsnorm_spec, swiglu
+from .param import ParamSpec, is_spec
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+def _layer_kind(cfg: ModelConfig, layer_idx: int) -> str:
+    return cfg.block_pattern[layer_idx % cfg.repeat_unit]
+
+
+def _is_moe_layer(cfg: ModelConfig, layer_idx: int) -> bool:
+    return cfg.moe is not None and layer_idx >= cfg.moe.first_dense_layers
+
+
+def _layer_specs(cfg: ModelConfig, kind: str, moe_layer: bool) -> dict:
+    D = cfg.d_model
+    s: dict[str, Any] = {"ln1": rmsnorm_spec(D), "ln2": rmsnorm_spec(D)}
+    if kind == "attn":
+        s["mix"] = attn_lib.mla_specs(cfg) if cfg.mla else attn_lib.gqa_specs(cfg)
+    elif kind == "rwkv":
+        s["mix"] = rwkv_lib.rwkv_specs(cfg)
+    elif kind == "rglru":
+        s["mix"] = rglru_lib.rglru_specs(cfg)
+    else:
+        raise ValueError(kind)
+    s["ffn"] = moe_lib.moe_specs(cfg) if moe_layer else mlp_specs(D, cfg.d_ff)
+    return s
+
+
+def _stack(structure, n: int):
+    return jax.tree.map(
+        lambda p: ParamSpec((n,) + p.shape, ("layers",) + p.axes, p.dtype,
+                            p.init, None if p.fan_in_axes is None
+                            else tuple(i + 1 for i in p.fan_in_axes)),
+        structure, is_leaf=is_spec)
+
+
+def _partition(cfg: ModelConfig):
+    """(prefix_idxs, scanned_idxs, suffix_idxs) over the layer range."""
+    P = cfg.moe.first_dense_layers if cfg.moe else 0
+    rest = cfg.num_layers - P
+    U = rest // cfg.repeat_unit
+    R = rest - U * cfg.repeat_unit
+    prefix = list(range(P))
+    scanned = list(range(P, P + U * cfg.repeat_unit))
+    suffix = list(range(P + U * cfg.repeat_unit, cfg.num_layers))
+    return prefix, scanned, suffix, U
+
+
+def structure(cfg: ModelConfig) -> dict:
+    D, V = cfg.d_model, cfg.padded_vocab
+    prefix, scanned, suffix, U = _partition(cfg)
+    s: dict[str, Any] = {
+        "embed": ParamSpec((V, D), ("vocab", "embed"), fan_in_axes=(1,)),
+        "final_norm": rmsnorm_spec(D),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((V, D), ("vocab", "embed"))
+    s["prefix"] = [
+        _layer_specs(cfg, _layer_kind(cfg, i), _is_moe_layer(cfg, i)) for i in prefix]
+    if U > 0:
+        unit = {f"b{j}": _layer_specs(cfg, _layer_kind(cfg, scanned[0] + j),
+                                      _is_moe_layer(cfg, scanned[0] + j))
+                for j in range(cfg.repeat_unit)}
+        s["unit"] = _stack(unit, U)
+    s["suffix"] = [
+        _layer_specs(cfg, _layer_kind(cfg, i), _is_moe_layer(cfg, i)) for i in suffix]
+    return s
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int):
+    if kind == "attn":
+        if cfg.mla:
+            return attn_lib.init_mla_cache(cfg, batch, max_len)
+        length = min(max_len, cfg.window) if cfg.window else max_len
+        c = attn_lib.init_kv_cache(cfg, batch, length)
+        if cfg.window:
+            c["pos"] = jnp.full((length,), -(2 ** 30), jnp.int32)
+        return c
+    if kind == "rwkv":
+        return rwkv_lib.init_rwkv_state(cfg, batch)
+    if kind == "rglru":
+        return rglru_lib.init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    prefix, scanned, suffix, U = _partition(cfg)
+    cache: dict[str, Any] = {
+        "prefix": [_layer_cache(cfg, _layer_kind(cfg, i), batch, max_len)
+                   for i in prefix],
+        "suffix": [_layer_cache(cfg, _layer_kind(cfg, i), batch, max_len)
+                   for i in suffix],
+    }
+    if U > 0:
+        unit = {f"b{j}": _layer_cache(cfg, _layer_kind(cfg, scanned[0] + j),
+                                      batch, max_len)
+                for j in range(cfg.repeat_unit)}
+        cache["unit"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (U,) + x.shape), unit)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# layer application
+# ---------------------------------------------------------------------------
+
+def _window_cache_write(cfg, cache, k, v, positions):
+    """Ring-buffer write for local attention; returns (cache', k_all, v_all, kpos)."""
+    W = cache["k"].shape[1]
+    S = k.shape[1]
+    if S == 1:
+        slot = positions[0, 0] % W
+        k_all = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(jnp.bfloat16), slot, axis=1)
+        v_all = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(jnp.bfloat16), slot, axis=1)
+        pos = jax.lax.dynamic_update_slice_in_dim(cache["pos"], positions[0, :1], slot, axis=0)
+    else:
+        if S > W:
+            k, v, positions = k[:, -W:], v[:, -W:], positions[:, -W:]
+        slots = positions[0] % W
+        k_all = cache["k"].at[:, slots].set(k.astype(jnp.bfloat16))
+        v_all = cache["v"].at[:, slots].set(v.astype(jnp.bfloat16))
+        pos = cache["pos"].at[slots].set(positions[0])
+    return {"k": k_all, "v": v_all, "pos": pos}, k_all, v_all, pos
+
+
+def _apply_attn(cfg, p, x, positions, cache, cache_index, kv_valid, decode):
+    if cfg.mla:
+        return attn_lib.apply_mla(cfg, p, x, positions=positions, cache=cache,
+                                  cache_index=cache_index, kv_valid=kv_valid)
+    window = cfg.window
+    if cache is not None and window:
+        # local attention with ring cache: project, rope, then ring write
+        H, KV, Dh = cfg.padded_heads, cfg.kv_heads_effective, cfg.head_dim
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bq" in p:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        from .layers import apply_rope, rope_angles
+        cos, sin = rope_angles(positions, Dh, cfg.rope_theta)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        new_cache, k_all, v_all, kpos = _window_cache_write(cfg, cache, k, v, positions)
+        B, Sq = q.shape[0], q.shape[1]
+        qg = q.reshape(B, Sq, KV, H // KV, Dh)
+        out = attn_lib.attend(qg, k_all, v_all, positions[0], kpos,
+                              causal=True, window=window, kv_valid=kv_valid,
+                              kv_chunk=cfg.attn_chunk)
+        y = jnp.einsum("bshk,hkd->bsd", out.reshape(B, Sq, H, Dh), p["wo"])
+        return y, new_cache
+    return attn_lib.apply_gqa(cfg, p, x, positions=positions, cache=cache,
+                              cache_index=cache_index, kv_valid=kv_valid,
+                              window=window)
+
+
+def _apply_layer(cfg, kind, moe_layer, p, x, positions, cache, cache_index,
+                 kv_valid, decode):
+    h = rmsnorm(p["ln1"], x, cfg.rms_eps)
+    if kind == "attn":
+        mix, new_cache = _apply_attn(cfg, p["mix"], h, positions, cache,
+                                     cache_index, kv_valid, decode)
+    elif kind == "rwkv":
+        mix, new_cache = rwkv_lib.apply_rwkv(cfg, p["mix"], h, cache, decode=decode)
+    else:
+        mix, new_cache = rglru_lib.apply_rglru(cfg, p["mix"], h, cache, decode=decode)
+    # Megatron-SP: constrain each block OUTPUT to the sequence-sharded layout
+    # so the TP partial-sum lowers to reduce-scatter instead of all-reduce
+    # (the all-gather on the next block's input is paid either way).
+    mix = constrain(mix, cfg, ("dp", "sp", None))
+    x = x + mix
+    h = rmsnorm(p["ln2"], x, cfg.rms_eps)
+    if moe_layer:
+        ffn, aux = moe_lib.apply_moe(cfg, p["ffn"], h)
+    else:
+        from .layers import tp_project_rs
+        hid = jax.nn.silu(h @ p["ffn"]["w1"]) * (h @ p["ffn"]["w3"])
+        ffn = tp_project_rs(hid, p["ffn"]["w2"], cfg, contract_model_dims=1)
+        aux = 0.0
+    x = x + ffn
+    # boundary residual: DP batch + (optionally) sequence-parallel over model
+    x = constrain(x, cfg, ("dp", "sp", None))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# model entry points
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, prefix_embeds):
+    x = params["embed"][tokens] * jnp.sqrt(float(cfg.d_model)).astype(jnp.bfloat16)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    return x
+
+
+def _logits(cfg, params, x):
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum("bsd,vd->bsv", x, head)
+
+
+def _run_stack(cfg, params, x, positions, caches, cache_index, kv_valid,
+               decode, train):
+    prefix, scanned, suffix, U = _partition(cfg)
+    aux_total = 0.0
+    new_caches: dict[str, Any] = {"prefix": [], "suffix": []}
+
+    for n, i in enumerate(prefix):
+        c = caches["prefix"][n] if caches else None
+        x, nc, aux = _apply_layer(cfg, _layer_kind(cfg, i), _is_moe_layer(cfg, i),
+                                  params["prefix"][n], x, positions, c,
+                                  cache_index, kv_valid, decode)
+        new_caches["prefix"].append(nc)
+        aux_total += aux
+
+    if U > 0:
+        kinds = [_layer_kind(cfg, scanned[0] + j) for j in range(cfg.repeat_unit)]
+        moes = [_is_moe_layer(cfg, scanned[0] + j) for j in range(cfg.repeat_unit)]
+
+        def unit_body(carry, xs):
+            x, aux = carry
+            p_unit, c_unit = xs
+            new_c = {}
+            for j, (kind, moe_l) in enumerate(zip(kinds, moes)):
+                c = c_unit[f"b{j}"] if c_unit is not None else None
+                x, nc, a = _apply_layer(cfg, kind, moe_l, p_unit[f"b{j}"], x,
+                                        positions, c, cache_index, kv_valid, decode)
+                new_c[f"b{j}"] = nc
+                aux = aux + a
+            return (x, aux), new_c
+
+        body = unit_body
+        if train and cfg.remat:
+            policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                      if cfg.remat_policy == "dots"
+                      else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(unit_body, policy=policy)
+        if not cfg.use_scan:
+            # unrolled path (roofline cost compiles: exact per-unit marginals)
+            carry = (x, aux_total)
+            outs = []
+            for u in range(U):
+                p_u = jax.tree.map(lambda a: a[u], params["unit"])
+                c_u = (jax.tree.map(lambda a: a[u], caches["unit"])
+                       if caches else None)
+                carry, nc = body(carry, (p_u, c_u))
+                outs.append(nc)
+            x, aux_total = carry
+            new_caches["unit"] = (jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+                                  if caches else None)
+        elif caches is None:
+            def body_nocache(carry, p_unit):
+                new_carry, _ = body(carry, (p_unit, None))
+                return new_carry, None
+            (x, aux_total), _ = jax.lax.scan(body_nocache, (x, aux_total), params["unit"])
+            new_caches["unit"] = None
+        else:
+            xs = (params["unit"], caches["unit"])
+            (x, aux_total), unit_caches = jax.lax.scan(body, (x, aux_total), xs)
+            new_caches["unit"] = unit_caches
+
+    for n, i in enumerate(suffix):
+        c = caches["suffix"][n] if caches else None
+        x, nc, aux = _apply_layer(cfg, _layer_kind(cfg, i), _is_moe_layer(cfg, i),
+                                  params["suffix"][n], x, positions, c,
+                                  cache_index, kv_valid, decode)
+        new_caches["suffix"].append(nc)
+        aux_total += aux
+
+    x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    return x, new_caches, aux_total
+
+
+def forward(cfg: ModelConfig, params, tokens, prefix_embeds=None, *, train=True):
+    """Full-sequence forward (training / evaluation).  Returns (logits, aux)."""
+    x, aux = forward_hidden(cfg, params, tokens, prefix_embeds, train=train)
+    return _logits(cfg, params, x), aux
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens, prefix_embeds=None, *,
+                   train=True):
+    """Forward up to the final norm (pre-logits) — the fused-CE entry point."""
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, _, aux = _run_stack(cfg, params, x, positions, None, None, None,
+                           decode=False, train=train)
+    return x, aux
+
+
+def lm_head_weights(cfg: ModelConfig, params):
+    return params["embed"] if cfg.tie_embeddings else params["lm_head"]
+
+
+def prefill(cfg: ModelConfig, params, tokens, cache, prefix_embeds=None):
+    """Populate caches from a prompt; returns (last-position logits, cache)."""
+    x = _embed_inputs(cfg, params, tokens, prefix_embeds)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    x, new_cache, _ = _run_stack(cfg, params, x, positions, cache, 0,
+                                 jnp.int32(S), decode=False, train=False)
+    return _logits(cfg, params, x[:, -1:]), new_cache
+
+
+def decode_step(cfg: ModelConfig, params, token, cache, index):
+    """One decode step.  token: (B, 1) int32; index: scalar int32 position."""
+    x = _embed_inputs(cfg, params, token, None)
+    B = x.shape[0]
+    positions = jnp.broadcast_to(index.astype(jnp.int32)[None, None], (B, 1))
+    x, new_cache, _ = _run_stack(cfg, params, x, positions, cache, index,
+                                 index + 1, decode=True, train=False)
+    return _logits(cfg, params, x), new_cache

@@ -1,0 +1,72 @@
+"""Parameter structure: shapes + logical axes + init, from one declaration.
+
+Every model declares its parameters once as a pytree of :class:`ParamSpec`.
+From that single structure we derive:
+
+- real initialised arrays (tests / training),
+- ``jax.ShapeDtypeStruct`` stand-ins (dry-run lowering — no allocation),
+- logical-axis trees that ``parallel.sharding`` maps to mesh PartitionSpecs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis names, len == rank
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                  # normal | zeros | ones
+    fan_in_axes: tuple[int, ...] | None = None  # dims contracted on use
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _tree_map(f, structure):
+    return jax.tree.map(f, structure, is_leaf=is_spec)
+
+
+def shape_structs(structure):
+    """ShapeDtypeStruct tree — what the dry-run lowers against."""
+    return _tree_map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), structure)
+
+
+def axes_tree(structure):
+    return _tree_map(lambda s: s.axes, structure)
+
+
+def init_params(structure, key):
+    """Materialise real parameters (smoke tests, the 100M-class train driver)."""
+    leaves, treedef = jax.tree.flatten(structure, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for spec, k in zip(leaves, keys):
+        if spec.init == "zeros":
+            out.append(jnp.zeros(spec.shape, spec.dtype))
+        elif spec.init == "ones":
+            out.append(jnp.ones(spec.shape, spec.dtype))
+        else:
+            if spec.fan_in_axes:
+                fan_in = int(np.prod([spec.shape[i] for i in spec.fan_in_axes]))
+            else:
+                fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, spec.shape, jnp.float32) * scale
+                        ).astype(spec.dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def count_params(structure) -> int:
+    leaves = jax.tree.leaves(structure, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

@@ -1,0 +1,143 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(x_t @ Wa)                    (recurrence gate)
+    i_t = sigmoid(x_t @ Wx)                    (input gate)
+    a_t = exp(-c * softplus(Λ) * r_t)          (data-dependent diagonal decay)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill evaluates the diagonal linear recurrence with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly — the hardware
+adaptation of the GPU sequential kernel); the Pallas kernel
+(kernels/rglru_scan.py) provides a chunked VMEM variant.  Decode keeps
+(h, conv window) state.  Channels are fully independent, so the "rnn" width
+axis shards cleanly over the model axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import constrain
+from .param import ParamSpec
+
+C_CONST = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    D, R, W = cfg.d_model, cfg.rnn_width, cfg.conv_width
+    return {
+        "w_in": ParamSpec((D, R), ("embed", "rnn")),
+        "w_gate_branch": ParamSpec((D, R), ("embed", "rnn")),
+        "conv_w": ParamSpec((W, R), (None, "rnn")),
+        "conv_b": ParamSpec((R,), ("rnn",), init="zeros"),
+        "wa": ParamSpec((R, R), ("rnn", None)),
+        "ba": ParamSpec((R,), ("rnn",), init="zeros"),
+        "wx": ParamSpec((R, R), ("rnn", None)),
+        "bx": ParamSpec((R,), ("rnn",), init="zeros"),
+        "lam": ParamSpec((R,), ("rnn",), dtype=jnp.float32, init="ones"),
+        "w_out": ParamSpec((R, D), ("rnn", "embed")),
+    }
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    R, W = cfg.rnn_width, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, R), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, R), jnp.bfloat16),
+    }
+
+
+def _gates(p, u):
+    """u: (..., R) post-conv activations → (log_a, gated input)."""
+    r = jax.nn.sigmoid((u @ p["wa"] + p["ba"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["wx"] + p["bx"]).astype(jnp.float32))
+    log_a = -C_CONST * jax.nn.softplus(p["lam"]) * r            # (..., R) < 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    x_in = beta * i * u.astype(jnp.float32)
+    return log_a, x_in
+
+
+def rglru_scan(log_a, x_in, h0):
+    """Diagonal linear recurrence h_t = a_t h_{t-1} + x_t via associative scan.
+
+    log_a/x_in: (B, S, R) fp32; h0: (B, R) fp32.
+    """
+    # Fold h0 into the first element: h_1 = a_1 h_0 + x_1.
+    x_in = x_in.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(c1, c2):
+        la1, y1 = c1
+        la2, y2 = c2
+        return la1 + la2, jnp.exp(la2) * y1 + y2
+
+    la, h = jax.lax.associative_scan(combine, (log_a, x_in), axis=1)
+    return h
+
+
+def rglru_chunked(log_a, x_in, h0, chunk: int):
+    """Chunked recurrence: inner associative scan, outer sequential carry.
+
+    Bounds the log-depth scan's materialised intermediates to O(chunk)
+    instead of O(S) — the memory fix that lets train_4k/prefill_32k cells
+    fit HBM (the Pallas kernel mirrors this chunking in VMEM).
+    """
+    B, S, R = x_in.shape
+    if S <= chunk:
+        hs = rglru_scan(log_a, x_in, h0)
+        return hs, hs[:, -1]
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+        x_in = jnp.pad(x_in, ((0, 0), (0, pad), (0, 0)))
+    la_c = log_a.reshape(B, n, chunk, R).transpose(1, 0, 2, 3)
+    xi_c = x_in.reshape(B, n, chunk, R).transpose(1, 0, 2, 3)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(h, blk):
+        la, xi = blk
+        hs = rglru_scan(la, xi, h)
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(body, h0, (la_c, xi_c))
+    hs = hs.transpose(1, 0, 2, 3).reshape(B, n * chunk, R)[:, :S]
+    return hs, h_last
+
+
+def apply_rglru(cfg: ModelConfig, p: dict, x: jax.Array, state: dict | None = None,
+                *, decode: bool = False):
+    """Griffin recurrent block body: conv1d → RG-LRU → gate → out-proj."""
+    B, S, D = x.shape
+    W = cfg.conv_width
+    gate = jax.nn.gelu(x @ p["w_gate_branch"])
+    u = x @ p["w_in"]                                           # (B, S, R)
+    gate = constrain(gate, cfg, ("dp", None, "model"))
+    u = constrain(u, cfg, ("dp", None, "model"))
+
+    prev = state["conv"] if state is not None else jnp.zeros(
+        (B, W - 1, u.shape[-1]), u.dtype)
+    seq = jnp.concatenate([prev.astype(u.dtype), u], axis=1)    # (B, S+W-1, R)
+    # depthwise causal conv, width W
+    conv = sum(seq[:, i:i + S] * p["conv_w"][i] for i in range(W)) + p["conv_b"]
+
+    log_a, x_in = _gates(p, conv)
+    log_a = constrain(log_a, cfg, ("dp", None, "model"))
+    x_in = constrain(x_in, cfg, ("dp", None, "model"))
+    h0 = state["h"] if state is not None else jnp.zeros((B, u.shape[-1]), jnp.float32)
+    if decode:
+        h = jnp.exp(log_a[:, 0]) * h0 + x_in[:, 0]
+        hs = h[:, None]
+        h_last = h
+    elif cfg.use_pallas:
+        from ..kernels import ops as kops
+        hs, h_last = kops.rglru_scan(log_a, x_in, h0)
+    else:
+        hs, h_last = rglru_chunked(log_a, x_in, h0, cfg.rglru_chunk)
+    hs = constrain(hs, cfg, ("dp", None, "model"))
+
+    y = (hs.astype(x.dtype) * gate) @ p["w_out"]
+    new_state = {"h": h_last, "conv": seq[:, -(W - 1):].astype(jnp.bfloat16)}
+    return y, new_state

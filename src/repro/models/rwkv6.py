@@ -1,0 +1,166 @@
+"""RWKV6 "Finch" time-mixing: linear attention with data-dependent decay.
+
+TPU-native adaptation of the WKV6 recurrence: the GPU reference uses a
+per-token CUDA kernel; here training/prefill run a *chunked-parallel* form —
+within a chunk the recurrence is expressed as dense matmuls (MXU-friendly),
+and the (head, Dk, Dv) state is carried across chunks by a scan.  The Pallas
+kernel (kernels/rwkv6_scan.py) implements the same chunking with the state in
+VMEM scratch and a sequential grid axis over chunks.
+
+Recurrence (per head, per step t):
+    a_t   = k_t ⊗ v_t                       (Dk, Dv)
+    out_t = r_t @ (S_{t-1} + diag(u) a_t)   (Dv,)
+    S_t   = diag(w_t) S_{t-1} + a_t
+with w_t = exp(-exp(w0 + lora(x_t)))  — the data-dependent decay that defines
+RWKV6.  (Token-shift mixing uses static lerp weights; Finch's ddlerp is an
+orthogonal refinement, noted in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .layers import constrain, rmsnorm
+from .param import ParamSpec
+
+LORA_RANK = 64
+CHUNK = 32
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    D, H, Dh = cfg.d_model, cfg.padded_heads, cfg.head_dim
+    return {
+        "mu_r": ParamSpec((D,), ("embed",), init="zeros"),
+        "mu_k": ParamSpec((D,), ("embed",), init="zeros"),
+        "mu_v": ParamSpec((D,), ("embed",), init="zeros"),
+        "mu_w": ParamSpec((D,), ("embed",), init="zeros"),
+        "mu_g": ParamSpec((D,), ("embed",), init="zeros"),
+        "wr": ParamSpec((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((D, H, Dh), ("embed", "heads", "head_dim")),
+        "wg": ParamSpec((D, H, Dh), ("embed", "heads", "head_dim")),
+        "w0": ParamSpec((H, Dh), ("heads", "head_dim"), dtype=jnp.float32, init="zeros"),
+        "w_lora_a": ParamSpec((D, LORA_RANK), ("embed", None)),
+        "w_lora_b": ParamSpec((LORA_RANK, H, Dh), (None, "heads", "head_dim")),
+        "u": ParamSpec((H, Dh), ("heads", "head_dim"), dtype=jnp.float32, init="zeros"),
+        "ln_x": ParamSpec((H, Dh), ("heads", "head_dim"), dtype=jnp.float32, init="ones"),
+        "wo": ParamSpec((H, Dh, D), ("heads", "head_dim", "embed"), fan_in_axes=(0, 1)),
+    }
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    H, Dh = cfg.padded_heads, cfg.head_dim
+    return {
+        "s": jnp.zeros((batch, H, Dh, Dh), jnp.float32),   # wkv state
+        "x_prev": jnp.zeros((batch, cfg.d_model), jnp.bfloat16),
+    }
+
+
+def _projections(cfg, p, x, x_prev):
+    """Token-shift lerps + r/k/v/g/w projections.  x: (B, S, D)."""
+    shifted = jnp.concatenate([x_prev[:, None, :], x[:, :-1, :]], axis=1)
+
+    def mix(mu):
+        return x + (shifted - x) * mu.astype(x.dtype)
+
+    r = jnp.einsum("bsd,dhk->bshk", mix(p["mu_r"]), p["wr"])
+    k = jnp.einsum("bsd,dhk->bshk", mix(p["mu_k"]), p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", mix(p["mu_v"]), p["wv"])
+    g = jnp.einsum("bsd,dhk->bshk", mix(p["mu_g"]), p["wg"])
+    xw = mix(p["mu_w"])
+    lora = jnp.tanh(xw @ p["w_lora_a"])
+    w_log = p["w0"] + jnp.einsum("bsr,rhk->bshk", lora, p["w_lora_b"]).astype(jnp.float32)
+    log_decay = -jnp.exp(jnp.clip(w_log, -8.0, 4.0))           # in (-inf, 0)
+    log_decay = jnp.maximum(log_decay, -8.0)                   # numerics floor
+    return r, k, v, g, log_decay
+
+
+def wkv_chunked(r, k, v, log_w, u, s0, chunk: int = CHUNK):  # noqa: C901
+    """Chunked-parallel WKV6 scan.
+
+    r/k/v: (B, S, H, Dh) ; log_w: (B, S, H, Dh) fp32 ; u: (H, Dh) ;
+    s0: (B, H, Dk, Dv) fp32.  Returns (out (B,S,H,Dh), s_final).
+    """
+    B, S, H, Dh = r.shape
+    n = -(-S // chunk)
+    pad = n * chunk - S
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        log_w = jnp.pad(log_w, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    split = lambda a: a.reshape(B, n, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = split(r), split(k), split(v), split(log_w)
+
+    @functools.partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def body(s, blk):
+        rb, kb, vb, wb = blk                                    # (B, c, H, Dh)
+        rb32, kb32, vb32 = (a.astype(jnp.float32) for a in (rb, kb, vb))
+        cw = jnp.cumsum(wb, axis=1)                             # (B, c, H, Dh) <= 0
+        # inter-chunk: out_i += (r_i * exp(cw_{i-1})) @ s
+        r_decayed = rb32 * jnp.exp(cw - wb)                     # exp(cw_{i-1})
+        inter = jnp.einsum("bchk,bhkv->bchv", r_decayed, s)
+        # intra-chunk: pairwise decay ratios exp(cw_{i-1} - cw_j), j < i
+        expo = (cw - wb)[:, :, None] - cw[:, None, :, :]        # (B, c_i, c_j, H, Dh)
+        expo = jnp.exp(jnp.clip(expo, -60.0, 0.0))
+        att = jnp.einsum("bihk,bijhk,bjhk->bijh", rb32, expo, kb32)
+        c = rb.shape[1]
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        att = att * tri[None, :, :, None]
+        intra = jnp.einsum("bijh,bjhv->bihv", att, vb32)
+        # bonus (current token): r_i . (u * k_i) * v_i
+        bonus = (rb32 * u * kb32).sum(-1, keepdims=True) * vb32
+        out = inter + intra + bonus
+        # state update: s = diag(exp(cw_c)) s + sum_j exp(cw_c - cw_j) k_j v_j
+        total = cw[:, -1]                                       # (B, H, Dh)
+        k_scaled = kb32 * jnp.exp(total[:, None] - cw)
+        s_new = jnp.exp(total)[..., None] * s + jnp.einsum(
+            "bjhk,bjhv->bhkv", k_scaled, vb32)
+        return s_new, out
+
+    s_final, outs = jax.lax.scan(body, s0, (rc, kc, vc, wc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, H, Dh)[:, :S]
+    return out, s_final
+
+
+def wkv_step(r, k, v, log_w, u, s):
+    """Single decode step.  r/k/v/log_w: (B, H, Dh); s: (B, H, Dk, Dv)."""
+    r32, k32, v32 = (a.astype(jnp.float32) for a in (r, k, v))
+    a = k32[..., :, None] * v32[..., None, :]                   # (B,H,Dk,Dv)
+    out = jnp.einsum("bhk,bhkv->bhv", r32, s + u[..., None] * a)
+    s_new = jnp.exp(log_w)[..., None] * s + a
+    return out, s_new
+
+
+def apply_rwkv(cfg: ModelConfig, p: dict, x: jax.Array, state: dict | None = None,
+               *, decode: bool = False):
+    """Time-mixing block body.  Returns (y, new_state)."""
+    B, S, D = x.shape
+    H, Dh = cfg.padded_heads, cfg.head_dim
+    x_prev = state["x_prev"] if state is not None else jnp.zeros((B, D), x.dtype)
+    r, k, v, g, log_w = _projections(cfg, p, x, x_prev)
+    tpl = ("dp", None, "model", None)
+    r, k, v, g = (constrain(a, cfg, tpl) for a in (r, k, v, g))
+    log_w = constrain(log_w, cfg, tpl)
+    u = p["u"]
+    s0 = state["s"] if state is not None else jnp.zeros((B, H, Dh, Dh), jnp.float32)
+
+    if decode:
+        out, s_new = wkv_step(r[:, 0], k[:, 0], v[:, 0], log_w[:, 0], u, s0)
+        out = out[:, None]
+    elif cfg.use_pallas:
+        from ..kernels import ops as kops
+        out, s_new = kops.rwkv6_scan(r, k, v, log_w, u, s0)
+    else:
+        out, s_new = wkv_chunked(r, k, v, log_w, u, s0, cfg.wkv_chunk)
+
+    # per-head group norm, then output gate + projection
+    out = out.reshape(B, S, H, Dh).astype(jnp.float32)
+    var = jnp.mean(out * out, axis=-1, keepdims=True)
+    out = out * jax.lax.rsqrt(var + cfg.rms_eps) * p["ln_x"]
+    out = out.astype(x.dtype) * jax.nn.silu(g)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    new_state = {"s": s_new, "x_prev": x[:, -1, :].astype(jnp.bfloat16)}
+    return y, new_state

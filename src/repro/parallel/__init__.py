@@ -1,0 +1,3 @@
+from .sharding import (batch_shardings, cache_shardings, constrain_activation,  # noqa: F401
+                       dp_axes, dp_size, opt_shardings, param_pspec,
+                       param_shardings)

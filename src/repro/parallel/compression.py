@@ -1,0 +1,82 @@
+"""Gradient compression: int8 quantised all-reduce with error feedback.
+
+Used by the elastic data-parallel cluster (node-level gradient exchange):
+each worker quantises its local gradient to int8 with a per-tensor scale,
+the reduction runs on the quantised payload (8x wire-format saving vs f32
+/ 4x vs bf16), and the quantisation residual is fed back into the next
+round (error feedback keeps the scheme unbiased over time — Seide et al.,
+Karimireddy et al.).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g: jax.Array, error: jax.Array | None = None):
+    """Returns (q int8, scale fp32, new_error)."""
+    g32 = g.astype(jnp.float32)
+    if error is not None:
+        g32 = g32 + error
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, g32 - deq
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedback:
+    """Per-worker error-feedback state over a gradient pytree."""
+
+    def __init__(self):
+        self._err: Any = None
+
+    def compress(self, grads: Any):
+        if self._err is None:
+            self._err = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+        qs, scales, errs = [], [], []
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = jax.tree.leaves(self._err)
+        for g, e in zip(flat_g, flat_e):
+            q, s, ne = quantize(g, e)
+            qs.append(q)
+            scales.append(s)
+            errs.append(ne)
+        self._err = jax.tree.unflatten(treedef, errs)
+        return jax.tree.unflatten(treedef, qs), jax.tree.unflatten(treedef, scales)
+
+
+def allreduce_compressed(worker_grads: list, feedbacks: list[ErrorFeedback]):
+    """Mean-reduce gradients across workers on int8 payloads.
+
+    `worker_grads`: list of per-worker gradient pytrees (same structure).
+    Returns the dequantised mean pytree + wire bytes actually exchanged.
+    """
+    n = len(worker_grads)
+    payloads = []
+    wire_bytes = 0
+    for grads, fb in zip(worker_grads, feedbacks):
+        q, s = fb.compress(grads)
+        payloads.append((q, s))
+        wire_bytes += sum(x.size for x in jax.tree.leaves(q))          # int8
+        wire_bytes += 4 * len(jax.tree.leaves(s))                      # scales
+    deq = [jax.tree.map(dequantize, q, s) for q, s in payloads]
+    mean = jax.tree.map(lambda *xs: sum(xs) / n, *deq)
+    return mean, wire_bytes
+
+
+def allreduce_exact(worker_grads: list):
+    """Uncompressed reference reduction (fp32 wire format)."""
+    n = len(worker_grads)
+    mean = jax.tree.map(lambda *xs: sum(x.astype(jnp.float32) for x in xs) / n,
+                        *worker_grads)
+    wire = sum(4 * x.size for x in jax.tree.leaves(worker_grads[0])) * n
+    return mean, wire

@@ -1,0 +1,183 @@
+"""Sharding rules: logical axes → mesh PartitionSpecs.
+
+Parallelism map (single-pod mesh (16,16)=("data","model"); multi-pod adds a
+leading "pod" axis folded into data-parallelism):
+
+- DP  : batch over ("pod","data")
+- TP  : "heads"/"kv_heads"/"ffn"/"vocab"/"lora"/"rnn" over "model"
+- EP  : "experts" over "model" (MoE archs)
+- SP  : sequence dim of boundary activations over "model" (optional knob)
+- ZeRO-1: optimizer state additionally sharded over "data" on the first
+  replicated-and-divisible dim of each parameter
+
+Divisibility-aware fallback: a dim is sharded only when evenly divisible by
+the axis size (e.g. qwen2-0.5b's 14 heads stay replicated while its
+d_ff=4864 shards 16-way).  Each mesh axis is used at most once per spec.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.param import ParamSpec, axes_tree, is_spec, shape_structs
+
+# logical axis -> preferred mesh axis
+LOGICAL_RULES: dict[str | None, str | None] = {
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "lora": "model",
+    "rnn": "model",
+    "embed": None,
+    "head_dim": None,
+    "layers": None,
+    None: None,
+}
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes(mesh)]))
+
+
+def param_pspec(axes: tuple, shape: tuple, mesh: Mesh, *,
+                dp_only: bool = False) -> P:
+    if dp_only:
+        return P(*([None] * len(shape)))   # pure-DP: weights replicated
+    spec, used = [], set()
+    for logical, dim in zip(axes, shape):
+        mesh_axis = LOGICAL_RULES.get(logical)
+        if (mesh_axis and mesh_axis in mesh.axis_names and mesh_axis not in used
+                and dim % mesh.shape[mesh_axis] == 0):
+            spec.append(mesh_axis)
+            used.add(mesh_axis)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def opt_pspec(axes: tuple, shape: tuple, mesh: Mesh, *, zero1: bool = True,
+              dp_only: bool = False) -> P:
+    """Optimizer-state spec: param spec + ZeRO-1 'data' sharding."""
+    base = list(param_pspec(axes, shape, mesh, dp_only=dp_only))
+    if zero1 and "data" in mesh.axis_names:
+        # pure-DP: ZeRO may shard over the whole flattened DP domain
+        candidates = ["data", "model"] if dp_only else ["data"]
+        for ax in candidates:
+            if ax not in mesh.axis_names or ax in base:
+                continue
+            d = mesh.shape[ax]
+            for i, (logical, dim) in enumerate(zip(axes, shape)):
+                if base[i] is None and logical != "layers" and dim % d == 0 \
+                        and dim >= d:
+                    base[i] = ax
+                    break
+    return P(*base)
+
+
+def param_shardings(structure, mesh: Mesh, *, dp_only: bool = False):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, param_pspec(s.axes, s.shape, mesh,
+                                                  dp_only=dp_only)),
+        structure, is_leaf=is_spec)
+
+
+def opt_shardings(structure, mesh: Mesh, *, zero1: bool = True,
+                  dp_only: bool = False):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, opt_pspec(s.axes, s.shape, mesh,
+                                                zero1=zero1, dp_only=dp_only)),
+        structure, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh: Mesh, shape: tuple, *, dp_only: bool = False) -> P:
+    """Inputs: leading batch dim over DP axes (replicated if not divisible)."""
+    dp = dp_axes(mesh)
+    if dp_only and "model" in mesh.axis_names:
+        dp = dp + ("model",)
+    sz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if dp and shape[0] % sz == 0:
+        return P(dp, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(input_structs, mesh: Mesh, *, dp_only: bool = False):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, batch_pspec(mesh, s.shape, dp_only=dp_only)),
+        input_structs)
+
+
+_CACHE_RULES = {
+    # name -> (rank-without-layer-dim, spec builder)
+    "k": lambda dp: (4, P(dp, None, "model", None)),
+    "v": lambda dp: (4, P(dp, None, "model", None)),
+    # MLA latent cache: replicate the (small) lora dim — sharding it forces a
+    # psum over the full cache in the per-step up-projection (measured 2.2s
+    # collective on deepseek decode_32k); head-sharded w_uk/w_uv then need no
+    # collective at all.
+    "ckv": lambda dp: (3, P(dp, None, None)),
+    "krope": lambda dp: (3, P(dp, None, None)),
+    "s": lambda dp: (4, P(dp, "model", None, None)),
+    "x_prev": lambda dp: (2, P(dp, None)),
+    "h": lambda dp: (2, P(dp, "model")),
+    "conv": lambda dp: (3, P(dp, None, "model")),
+    "pos": lambda dp: (1, P(None)),
+}
+
+
+def cache_shardings(cache, mesh: Mesh):
+    """Sharding for serve caches, keyed on leaf names (stable across models)."""
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = None
+        for entry in reversed(path):
+            if isinstance(entry, jax.tree_util.DictKey):
+                name = entry.key
+                break
+        base_rank, spec = _CACHE_RULES[name](dp)
+        parts = list(spec)
+        extra = leaf.ndim - base_rank            # leading stacked-layer dims
+        parts = [None] * extra + parts
+        # divisibility fallback on sharded dims
+        dp_names = set(dp) | {dp}
+        for i, p in enumerate(parts):
+            if p == "model" and leaf.shape[i] % _axis_size(mesh, "model") != 0:
+                parts[i] = None
+            elif p in dp_names and dp and leaf.shape[i] % dp_size(mesh) != 0:
+                parts[i] = None
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree.map_with_path(spec_for, cache)
+
+
+# ---------------------------------------------------------------------------
+# activation constraints (SP knob)
+# ---------------------------------------------------------------------------
+
+def constrain_activation(x, mesh: Mesh | None, *, sp: bool = False):
+    """Boundary-activation constraint: (B, S, D) → DP on batch, optional SP
+    (sequence dim over 'model') to cut per-chip boundary-residency 16x."""
+    if mesh is None or mesh.size == 1:
+        return x
+    dp = dp_axes(mesh)
+    if sp and "model" in mesh.axis_names and x.shape[1] % mesh.shape["model"] == 0:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, P(dp, "model", None)))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(dp, *([None] * (x.ndim - 1)))))

@@ -1,0 +1,4 @@
+from .optim import OptState, adamw_update, init_opt_state, lr_schedule, opt_state_structs  # noqa: F401
+from .step import (TrainState, build_decode_step, build_prefill_step,  # noqa: F401
+                   build_train_step, cross_entropy, init_train_state,
+                   train_state_structs)

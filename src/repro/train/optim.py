@@ -1,0 +1,91 @@
+"""AdamW with fp32 master weights, global-norm clipping, cosine schedule.
+
+Optimizer state layout is a plain pytree mirroring the params, so the
+ZeRO-1 shardings from parallel.sharding apply leaf-for-leaf.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+class OptState(NamedTuple):
+    mu: dict
+    nu: dict
+    master: dict | None   # fp32 master copy (None if disabled)
+    count: jax.Array
+
+
+def init_opt_state(params, tcfg: TrainConfig) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = (jax.tree.map(lambda p: p.astype(jnp.float32), params)
+              if tcfg.master_weights else None)
+    return OptState(mu=zeros, nu=jax.tree.map(jnp.copy, zeros), master=master,
+                    count=jnp.zeros((), jnp.int32))
+
+
+def opt_state_structs(param_structs, tcfg: TrainConfig) -> OptState:
+    f32 = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), param_structs)
+    return OptState(
+        mu=f32, nu=f32,
+        master=f32 if tcfg.master_weights else None,
+        count=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - tcfg.warmup_steps) /
+                    jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, params, opt: OptState, tcfg: TrainConfig):
+    """One AdamW step.  Returns (new_params, new_opt, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / (gnorm + 1e-9)) if tcfg.grad_clip else 1.0
+    count = opt.count + 1
+    lr = lr_schedule(tcfg, count)
+    b1, b2 = tcfg.beta1, tcfg.beta2
+    bc1 = 1.0 - b1 ** count.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def leaf(g, p, m, v, w):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / bc1) / (jnp.sqrt(v / bc2) + 1e-8)
+        base = w if w is not None else p.astype(jnp.float32)
+        new_w = base - lr * (upd + tcfg.weight_decay * base)
+        return m, v, new_w
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params)
+    flat_m = jax.tree.leaves(opt.mu)
+    flat_v = jax.tree.leaves(opt.nu)
+    flat_w = jax.tree.leaves(opt.master) if opt.master is not None else [None] * len(flat_p)
+
+    new_m, new_v, new_w = [], [], []
+    for g, p, m, v, w in zip(flat_g, flat_p, flat_m, flat_v, flat_w):
+        m2, v2, w2 = leaf(g, p, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+
+    unflat = lambda xs: jax.tree.unflatten(treedef, xs)
+    new_params = unflat([w.astype(p.dtype) for w, p in zip(new_w, flat_p)])
+    new_opt = OptState(
+        mu=unflat(new_m), nu=unflat(new_v),
+        master=unflat(new_w) if opt.master is not None else None,
+        count=count)
+    return new_params, new_opt, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,92 @@
+"""Per-architecture smoke tests: REDUCED same-family configs, one forward +
+one train step on CPU, asserting shapes and no NaNs (per task spec).
+
+The FULL configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.models import get_model
+from repro.train import build_train_step, init_train_state
+
+SMOKE_SHAPE = ShapeConfig("smoke", 32, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = model.realize_inputs(SMOKE_SHAPE, jax.random.key(1))
+    logits, aux = model.forward(params, batch)
+    B = SMOKE_SHAPE.global_batch
+    S = SMOKE_SHAPE.seq_len
+    assert logits.shape[0] == B and logits.shape[-1] == cfg.padded_vocab
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+    if cfg.moe is not None:
+        assert float(aux) >= 0.0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = get_model(cfg)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2, total_steps=10,
+                       grad_accum=2)
+    state = init_train_state(model, tcfg, jax.random.key(0))
+    step_fn = jax.jit(build_train_step(model, tcfg))
+    batch = model.realize_inputs(SMOKE_SHAPE, jax.random.key(1))
+    if "labels" not in batch:
+        batch["labels"] = batch["tokens"]
+    new_state, metrics = step_fn(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert float(metrics["grad_norm"]) > 0
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.abs(a.astype(jnp.float32)
+                                   - b.astype(jnp.float32)).max()),
+        state.params, new_state.params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "rwkv6-7b", "recurrentgemma-2b",
+                                  "deepseek-v2-lite-16b", "seamless-m4t-medium"])
+def test_serve_consistency(arch):
+    """prefill(1..S-1) + decode(S-1) logits == full forward logits."""
+    cfg = get_config(arch).reduced(remat=False)
+    model = get_model(cfg)
+    params = model.init(jax.random.key(0))
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.key(3), (B, S), 0, cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens}
+    if cfg.encdec:
+        batch["frames"] = jax.random.normal(
+            jax.random.key(4), (B, cfg.frontend_len, cfg.d_model)).astype(jnp.bfloat16)
+    full, _ = model.forward(params, batch, train=False)
+    cache = model.init_cache(B, S + 4)
+    pre_batch = dict(batch, tokens=tokens[:, :S - 1])
+    lg, cache = model.prefill(params, pre_batch, cache)
+    lg2, _ = model.decode_step(params, tokens[:, S - 1:S], cache, jnp.int32(S - 1))
+    np.testing.assert_allclose(
+        np.asarray(lg[:, 0], np.float32), np.asarray(full[:, -2], np.float32),
+        atol=1e-2, rtol=1e-2)
+    np.testing.assert_allclose(
+        np.asarray(lg2[:, 0], np.float32), np.asarray(full[:, -1], np.float32),
+        atol=1e-2, rtol=1e-2)
+
+
+def test_all_cells_applicability():
+    from repro.configs.registry import all_cells
+    cells = all_cells()
+    assert len(cells) == 40
+    skips = [c for c in cells if not c[2]]
+    # exactly the 8 pure-attention long_500k cells skip
+    assert len(skips) == 8
+    assert all(s[1] == "long_500k" for s in skips)
+    runnable = {(a, s) for a, s, ok, _ in cells if ok}
+    assert ("rwkv6-7b", "long_500k") in runnable
+    assert ("recurrentgemma-2b", "long_500k") in runnable

@@ -1,0 +1,81 @@
+"""Algorithm 1 (greedy pool) properties + ILP cross-checks."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pool as pool_lib
+
+
+def _rand_instance(seed, k):
+    rng = np.random.default_rng(seed)
+    scores = rng.uniform(0.1, 100.0, k)
+    cpus = rng.choice([2, 4, 8, 16, 32, 48, 64, 96], k).astype(float)
+    return scores, cpus
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(2, 40),
+       st.integers(32, 6000).map(lambda x: x / 4))
+def test_vectorized_matches_loop_oracle(seed, k, req):
+    # req restricted to quarter-integers: adversarial floats sitting exactly
+    # on a ceil() boundary can legitimately round differently between the
+    # float64 oracle and the float32 XLA path.
+    scores, cpus = _rand_instance(seed, k)
+    a = pool_lib.greedy_pool(scores, cpus, req)
+    b = pool_lib.greedy_pool_vectorized(scores, cpus, req)
+    assert list(a.indices) == list(b.indices)
+    assert list(a.counts) == list(b.counts)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(2, 40), st.floats(8, 1500))
+def test_pool_satisfies_requirement(seed, k, req):
+    scores, cpus = _rand_instance(seed, k)
+    res = pool_lib.greedy_pool(scores, cpus, req)
+    # score-proportional ceil allocation can only over-provision
+    assert res.total_cpus(cpus) >= req
+    assert (res.counts > 0).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(2, 30))
+def test_pool_diversity_monotone_in_scores(seed, k):
+    """Every selected member has score >= every unselected candidate ranked
+    below the last member (greedy adds in score order)."""
+    scores, cpus = _rand_instance(seed, k)
+    res = pool_lib.greedy_pool(scores, cpus, 256.0)
+    cutoff = res.scores.min()
+    n_above = (scores > cutoff).sum()
+    assert res.num_types >= min(1, n_above >= 0)
+    # all members rank within the top num_types+ties by score
+    order = np.argsort(-scores)
+    top = set(order[:len(res.indices)])
+    assert set(res.indices) <= top
+
+
+def test_terminates_on_zero_allocation():
+    # one dominant score: adding weak members gives them 0 nodes -> stop
+    scores = np.array([100.0, 0.001, 0.001])
+    cpus = np.array([4.0, 4.0, 4.0])
+    res = pool_lib.greedy_pool(scores, cpus, 16.0)
+    assert res.num_types == 1
+    assert res.counts[0] == 4
+
+
+def test_ilp_feasible_and_comparable():
+    scores, cpus = _rand_instance(7, 20)
+    req = 160.0
+    g = pool_lib.greedy_pool(scores, cpus, req)
+    ilp = pool_lib.ilp_pool(scores, cpus, req, gamma=1.0)
+    assert ilp.total_cpus(cpus) >= req
+    # vCPU-weighted objective: ILP should be >= greedy - small tolerance
+    def vobj(res):
+        return float((res.scores * np.asarray(cpus)[res.indices] * res.counts).sum())
+    assert vobj(ilp) >= 0.85 * vobj(g)
+
+
+def test_greedy_runtime_scales():
+    scores, cpus = _rand_instance(11, 5000)
+    res = pool_lib.greedy_pool_vectorized(scores, cpus, 640.0)
+    assert res.solve_time_s < 5.0
+    assert res.num_types >= 1

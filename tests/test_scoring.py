@@ -1,0 +1,89 @@
+"""Unit + property tests for the paper's scoring math (Eq. 2-4)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import scoring
+
+
+def test_fig2_patterns():
+    """Figure 2: consistently-high ≈ 100, consistently-low = 0, periodic ≈ 45."""
+    T = 64
+    t = np.arange(T)
+    t3 = np.stack([
+        np.full(T, 50.0),                 # (a) consistently high
+        np.zeros(T),                      # (b) consistently low
+        np.linspace(0, 50, T),            # (c) positive slope
+        25 + 25 * np.sin(t),              # (d) periodic
+    ])
+    s = np.asarray(scoring.availability_scores(t3))
+    assert s[0] == pytest.approx(100.0, abs=2.0)
+    assert s[1] == 0.0
+    assert 40 <= s[3] <= 50                # paper: 45
+    assert s[2] > s[3]                     # positive slope beats periodic
+
+
+def test_availability_bounds_and_order():
+    rng = np.random.default_rng(1)
+    t3 = rng.uniform(0, 50, size=(32, 100))
+    s = np.asarray(scoring.availability_scores(t3))
+    assert (s >= 0).all() and (s <= 110.0 + 1e-3).all()
+
+
+def test_cost_score_inverse_min_scaling():
+    prices = np.array([1.0, 2.0, 4.0])
+    cpus = np.array([8.0, 8.0, 8.0])
+    cs = np.asarray(scoring.cost_scores(prices, cpus, 64.0))
+    assert cs[0] == pytest.approx(100.0)
+    assert cs[1] == pytest.approx(50.0)
+    assert cs[2] == pytest.approx(25.0)
+
+
+def test_cost_score_ceil_node_count():
+    # 100 cores on 16-core boxes needs 7 nodes, on 48-core boxes 3 nodes
+    prices = np.array([1.0, 3.2])
+    cpus = np.array([16.0, 48.0])
+    cs = np.asarray(scoring.cost_scores(prices, cpus, 100.0))
+    # costs: 7*1=7 vs 3*3.2=9.6 -> first is cheapest
+    assert cs[0] == pytest.approx(100.0)
+    assert cs[1] == pytest.approx(100.0 * 7 / 9.6, rel=1e-5)
+
+
+def test_combined_weight_extremes():
+    av = np.array([10.0, 90.0])
+    co = np.array([100.0, 20.0])
+    assert np.allclose(scoring.combined_scores(av, co, 0.0), co)
+    assert np.allclose(scoring.combined_scores(av, co, 1.0), av)
+
+
+@settings(max_examples=50, deadline=None)
+@given(hnp.arrays(np.float64, hnp.array_shapes(min_dims=2, max_dims=2,
+                                               min_side=2, max_side=16),
+                  elements=st.floats(0, 50)))
+def test_jax_matches_numpy_reference(t3):
+    got = np.asarray(scoring.availability_scores(t3))
+    want = scoring.availability_scores_ref(t3)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 20), st.floats(1, 2000), st.integers(0, 2 ** 31))
+def test_cost_ref_property(k, req, seed):
+    rng = np.random.default_rng(seed)
+    prices = rng.uniform(0.01, 10, k)
+    cpus = rng.choice([2, 4, 8, 16, 32, 48, 64, 96], k).astype(float)
+    got = np.asarray(scoring.cost_scores(prices, cpus, req))
+    want = scoring.cost_scores_ref(prices, cpus, req)
+    np.testing.assert_allclose(got, want, rtol=1e-4)
+    assert got.max() == pytest.approx(100.0, rel=1e-5)  # cheapest gets 100
+
+
+def test_lambda_bounds_adjustment():
+    """λ bounds trend/volatility influence to ±λ·100% (§4.2)."""
+    rng = np.random.default_rng(2)
+    t3 = rng.uniform(0, 50, (16, 50))
+    comp = scoring.availability_scores(t3, lam=0.1, return_components=True)
+    base = np.asarray(100.0 * comp.a3)
+    adj = np.asarray(comp.score)
+    assert (np.abs(adj - base) <= 0.1 * base + 1e-4).all()

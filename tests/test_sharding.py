@@ -1,0 +1,89 @@
+"""Sharding-rule unit tests (no multi-device execution needed)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import get_config
+from repro.models import get_model
+from repro.parallel import sharding as shd
+
+
+class FakeMesh:
+    """Duck-typed mesh for pure spec logic (no devices needed)."""
+    def __init__(self, shape):
+        self._shape = shape
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+    @property
+    def shape(self):
+        return self._shape
+    @property
+    def size(self):
+        return int(np.prod(list(self._shape.values())))
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_param_pspec_divisibility_fallback():
+    # 14 heads don't divide 16 -> replicated; 4864 ffn does -> sharded
+    assert shd.param_pspec(("embed", "heads", "head_dim"), (896, 14, 64), MESH) \
+        == P(None, None, None)
+    assert shd.param_pspec(("embed", "ffn"), (896, 4864), MESH) == P(None, "model")
+    assert shd.param_pspec(("vocab", "embed"), (151936, 896), MESH) == P("model", None)
+
+
+def test_param_pspec_axis_used_once():
+    # experts and ffn both map to model: only the first gets it
+    spec = shd.param_pspec(("experts", "embed", "ffn"), (16, 5120, 8192), MESH)
+    assert spec == P("model", None, None)
+
+
+def test_opt_pspec_zero1():
+    spec = shd.opt_pspec(("embed", "ffn"), (5120, 25600), MESH)
+    assert spec == P("data", "model")
+    # layers axis never gets data sharding
+    spec = shd.opt_pspec(("layers", "embed", "ffn"), (64, 5120, 25600), MESH)
+    assert spec == P(None, "data", "model")
+
+
+def test_with_parallelism_padding():
+    cfg = get_config("llama4-scout-17b-a16e").with_parallelism(16)
+    assert cfg.padded_heads == 48          # 40 -> 48
+    assert cfg.kv_repeat == 2              # kv 8 -> 16
+    cfg2 = get_config("qwen2-0.5b").with_parallelism(16)
+    assert cfg2.padded_heads == 14         # small model: replicate instead
+    assert cfg2.kv_repeat == 1
+    cfg3 = get_config("seamless-m4t-medium").with_parallelism(16)
+    assert cfg3.padded_vocab == 256208     # 256206 -> /16
+    assert cfg3.padded_vocab % 16 == 0
+    cfg4 = get_config("qwen3-32b").with_parallelism(16)
+    assert cfg4.padded_heads == 64 and cfg4.kv_repeat == 2
+
+
+def test_all_arch_param_specs_valid():
+    """Every param of every arch gets a legal spec (axes used once, divisible)."""
+    for arch in ("qwen3-32b", "llama4-scout-17b-a16e", "deepseek-v2-lite-16b",
+                 "rwkv6-7b", "recurrentgemma-2b", "seamless-m4t-medium"):
+        cfg = get_config(arch).with_parallelism(16)
+        model = get_model(cfg)
+        from repro.models.param import is_spec
+        leaves = jax.tree.leaves(model.structure(), is_leaf=is_spec)
+        for spec in leaves:
+            ps = shd.param_pspec(spec.axes, spec.shape, MESH)
+            named = [p for p in ps if p is not None]
+            assert len(named) == len(set(named)), (arch, spec)
+            for dim, p in zip(spec.shape, ps):
+                if p is not None:
+                    assert dim % MESH.shape[p] == 0, (arch, spec, ps)
+
+
+def test_batch_pspec():
+    assert shd.batch_pspec(MESH, (256, 4096)) == P(("data",), None)
+    assert shd.batch_pspec(MESH, (1, 4096)) == P(None, None)  # B=1 fallback
+    pod = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert shd.batch_pspec(pod, (256, 4096)) == P(("pod", "data"), None)

@@ -1,0 +1,115 @@
+"""Simulator invariants + end-to-end engine recommendation tests."""
+import numpy as np
+import pytest
+
+from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                            QueryLimitExceeded, SpotMarket, SPSQueryService)
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.core.baselines import naive_single_point, spotfleet_select, spotverse_select
+
+
+@pytest.fixture(scope="module")
+def market():
+    return SpotMarket(Catalog(seed=5, n_regions=2), seed=5)
+
+
+def test_sps_monotone_non_increasing(market):
+    """The property TSTP exploits (§3.2) must hold for every pool."""
+    for (it, r, az) in market.pool_keys[::173]:
+        vals = [market.sps(it.name, r, az, n) for n in range(1, 51)]
+        assert all(a >= b for a, b in zip(vals, vals[1:])), (it.name, az)
+
+
+def test_t3_consistent_with_sps(market):
+    for (it, r, az) in market.pool_keys[::311]:
+        t3 = market.t3_true(it.name, r, az)
+        if t3 >= 1:
+            assert market.sps(it.name, r, az, max(t3, 1)) == 3
+        if t3 < 50:
+            assert market.sps(it.name, r, az, t3 + 1) < 3
+
+
+def test_request_and_interruption_lifecycle():
+    mkt = SpotMarket(Catalog(seed=6, n_regions=1), seed=6)
+    # find a pool with decent capacity
+    for (it, r, az) in mkt.pool_keys:
+        if mkt.t3_true(it.name, r, az) >= 20:
+            break
+    ok, ids = mkt.request_spot(it.name, r, az, 10)
+    assert ok and len(ids) == 10
+    mkt.advance(mkt.now + 3 * 1440.0)   # 3 days: capacity dips may reclaim
+    alive = sum(1 for rec in mkt.records if rec.alive)
+    done = [rec for rec in mkt.records if not rec.alive]
+    assert alive + len(done) == 10
+    for rec in done:
+        assert rec.reason == "interrupted"
+        assert rec.end_t > rec.launch_t
+
+
+def test_query_service_rate_limit():
+    mkt = SpotMarket(Catalog(seed=7, n_regions=1), seed=7)
+    svc = SPSQueryService(mkt, n_accounts=1, scenario_limit=5)
+    (it, r, az) = mkt.pool_keys[0]
+    for n in range(1, 6):
+        svc.query(it.name, r, az, n)
+    svc.query(it.name, r, az, 3)  # repeat scenario: free
+    with pytest.raises(QueryLimitExceeded):
+        svc.query(it.name, r, az, 6)
+
+
+def test_collector_and_engine_end_to_end():
+    mkt = SpotMarket(Catalog(seed=8, n_regions=1), seed=8)
+    svc = SPSQueryService(mkt, n_accounts=300)
+    targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[::17][:30]]
+    col = DataCollector(svc, targets, CollectorConfig())
+    col.run(25)
+    cands = col.to_candidate_set()
+    assert cands.t3.shape == (30, 25)
+
+    eng = RecommendationEngine()
+    rec = eng.recommend(cands, ResourceRequest(cpus=128.0))
+    assert rec.num_types >= 1
+    total = (cands.vcpus[np.isin(cands.names, rec.names)] .sum())
+    assert (rec.counts > 0).all()
+    assert rec.hourly_cost > 0
+    # memory-based request works too
+    rec_m = eng.recommend(cands, ResourceRequest(memory_gb=256.0))
+    assert rec_m.num_types >= 1
+
+
+def test_engine_weight_monotonicity():
+    """W=1 pool should have avg availability >= W=0 pool (Fig. 16)."""
+    mkt = SpotMarket(Catalog(seed=9, n_regions=1), seed=9)
+    svc = SPSQueryService(mkt, n_accounts=300)
+    targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[::13][:40]]
+    col = DataCollector(svc, targets, CollectorConfig())
+    col.run(22)
+    cands = col.to_candidate_set()
+    eng = RecommendationEngine()
+    rec_cost = eng.recommend(cands, ResourceRequest(cpus=96.0, weight=0.0))
+    rec_avail = eng.recommend(cands, ResourceRequest(cpus=96.0, weight=1.0))
+    assert rec_avail.availability.mean() >= rec_cost.availability.mean() - 1e-6
+    assert rec_cost.cost.mean() >= rec_avail.cost.mean() - 1e-6
+
+
+def test_baselines():
+    sps = np.array([3, 3, 2, 1])
+    if_s = np.array([3, 1, 3, 3])
+    price = np.array([2.0, 1.0, 0.5, 0.1])
+    # all four pass T=4 (sps+if >= 4): SpotVerse picks the cheapest -> idx 3
+    ch = spotverse_select(sps, if_s, price, threshold=4)
+    assert ch.index == 3
+    # T=6: only idx 0 (3+3) and idx 2 (2+3=5 fails) ... 0 qualifies
+    ch6 = spotverse_select(sps, if_s, price, threshold=6)
+    assert ch6.index == 0
+    assert spotfleet_select("lowest-price", price, sps).index == 3
+    co = spotfleet_select("capacity-optimized", price, np.array([10, 50, 50, 2]))
+    assert co.index == 2  # highest capacity, cheaper among ties
+    nv = naive_single_point(sps, price)
+    assert nv.index == 1  # sps==3 tie -> cheapest
+
+
+def test_interruption_free_score_range(market):
+    it, r, _ = market.pool_keys[0]
+    s = market.interruption_free_score(it.name, r)
+    assert s in (1, 2, 3)

@@ -1,0 +1,79 @@
+"""Kaplan-Meier, Cox PH, MSTL, and Bai-Perron statistics tests."""
+import numpy as np
+import pytest
+
+from repro.core.mstl import bai_perron, mstl_decompose, seasonal_strength
+from repro.core.survival import cox_ph, kaplan_meier
+
+
+def test_km_no_censoring_matches_empirical():
+    d = np.array([1, 2, 3, 4, 5.0])
+    e = np.ones(5, bool)
+    km = kaplan_meier(d, e)
+    np.testing.assert_allclose(km.survival, [0.8, 0.6, 0.4, 0.2, 0.0])
+    assert km.median() == 3.0
+
+
+def test_km_censoring():
+    d = np.array([1.0, 2.0, 2.0, 3.0])
+    e = np.array([1, 0, 1, 1])
+    km = kaplan_meier(d, e)
+    # t=1: 3/4; t=2: one event among 3 at risk -> 3/4 * 2/3 = 1/2
+    assert km.at(1.0) == pytest.approx(0.75)
+    assert km.at(2.0) == pytest.approx(0.5)
+
+
+def test_cox_recovers_negative_beta():
+    """Higher score => longer survival => negative beta (HR < 1)."""
+    rng = np.random.default_rng(0)
+    n = 600
+    x = rng.uniform(0, 100, n)
+    true_beta = -0.01
+    lam = 0.05 * np.exp(true_beta * (x - x.mean()))
+    dur = rng.exponential(1.0 / lam)
+    cens = rng.exponential(60.0, n)
+    events = dur <= cens
+    obs = np.minimum(dur, cens)
+    res = cox_ph(x, obs, events)
+    assert res.converged
+    assert res.hazard_ratio < 1.0
+    assert res.beta == pytest.approx(true_beta, abs=0.004)
+    assert res.ci_low < np.exp(true_beta) < res.ci_high
+    assert res.p_value < 0.05
+
+
+def test_mstl_recovers_daily_cycle():
+    t = np.arange(24 * 28)  # 4 weeks hourly
+    daily = 10 * np.sin(2 * np.pi * t / 24)
+    weekly = 2 * np.sin(2 * np.pi * t / 168)
+    noise = np.random.default_rng(1).normal(0, 0.5, len(t))
+    series = 50 + daily + weekly + noise
+    res = mstl_decompose(series, periods=(24, 168))
+    var = res.variance_decomposition()
+    assert var["seasonal_24"] > var["seasonal_168"] > var["residual"]
+    fs = seasonal_strength(res.seasonal[24], res.residual)
+    assert fs > 0.9  # AWS-like strong seasonality
+
+
+def test_seasonal_strength_weak_for_noise():
+    rng = np.random.default_rng(2)
+    series = rng.normal(0, 1, 24 * 14)
+    res = mstl_decompose(series, periods=(24,))
+    fs = seasonal_strength(res.seasonal[24], res.residual)
+    assert fs < 0.5
+
+
+def test_bai_perron_finds_break():
+    y = np.concatenate([np.full(20, 10.0), np.full(20, 14.0)])
+    y += np.random.default_rng(3).normal(0, 0.3, 40)
+    res = bai_perron(y, max_breaks=3)
+    assert res.n_breaks == 1
+    assert abs(res.breakpoints[0] - 20) <= 2
+    assert res.max_variation > 0.1
+
+
+def test_bai_perron_stable_series():
+    y = np.full(40, 10.0) + np.random.default_rng(4).normal(0, 0.2, 40)
+    res = bai_perron(y, max_breaks=3)
+    assert res.n_breaks == 0
+    assert res.max_variation < 0.05

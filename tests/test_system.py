@@ -1,0 +1,94 @@
+"""End-to-end behaviour tests for the paper's system (§6 claims in miniature).
+
+These are the system-level acceptance tests: the full pipeline (market →
+rate-limited collection → scoring → recommendation → real spot requests)
+must reproduce the paper's qualitative results on the simulator.
+"""
+import numpy as np
+import pytest
+
+from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                            SpotMarket, SPSQueryService, probe_real_availability)
+from repro.core import (RecommendationEngine, ResourceRequest,
+                        empirical_entropy, find_transition_points, full_scan)
+from repro.core.usqs import USQSSampler, T3Estimator
+
+
+@pytest.fixture(scope="module")
+def world():
+    cat = Catalog(seed=11, n_regions=2)
+    mkt = SpotMarket(cat, seed=11)
+    svc = SPSQueryService(mkt, n_accounts=800)
+    targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[::7][:60]]
+    col = DataCollector(svc, targets, CollectorConfig())
+    col.run(30)
+    return mkt, svc, col
+
+
+def test_usqs_vs_full_scan_integrity(world):
+    """RQ-1: USQS captures T3 within grid resolution of the ground truth."""
+    mkt, svc, col = world
+    errs = []
+    for tgt in col.targets[:30]:
+        ty, r, az = tgt
+        truth = mkt.t3_true(ty, r, az, t=col.times[-1])
+        est = col.t3_archive[tgt][-1]
+        errs.append(abs(truth - est))
+    # USQS grid step is 5; stale-cycle error bounded by grid + drift
+    assert np.median(errs) <= 5.0
+    assert np.mean(errs) <= 8.0
+
+
+def test_tstp_more_precise_than_usqs(world):
+    mkt, svc, col = world
+    errs_tstp, q_tstp = [], []
+    for tgt in col.targets[:20]:
+        ty, r, az = tgt
+        truth = full_scan(lambda n: mkt.sps(ty, r, az, n), 1, 50)
+        res = find_transition_points(lambda n: mkt.sps(ty, r, az, n), 1, 50)
+        errs_tstp.append(abs(truth.t3 - res.t3))
+        q_tstp.append(res.queries)
+    assert np.mean(errs_tstp) <= 0.5          # near exact
+    assert np.mean(q_tstp) < 15               # vs 50 for the full scan
+
+
+def test_entropy_matches_paper_band(world):
+    """§3.1.1: measured entropy well below the 3.46-bit uniform max."""
+    mkt, _, col = world
+    t3s = [mkt.t3_true(t.name, r, az) for (t, r, az) in mkt.pool_keys]
+    snapped = np.clip(np.round(np.array(t3s) / 5) * 5, 0, 50)
+    h = empirical_entropy(snapped)
+    assert 2.0 <= h <= 3.1                    # paper: 2.5052
+    assert h < np.log2(11) - 0.3
+
+
+def test_recommended_pools_more_available(world):
+    """RQ-3/RQ-4 in miniature: engine-recommended (W=1) pools succeed more
+    often on real multi-node spot requests than anti-recommended ones."""
+    mkt, svc, col = world
+    cands = col.to_candidate_set()
+    eng = RecommendationEngine()
+    comb, avail, cost = eng.score(cands, ResourceRequest(cpus=64.0, weight=1.0))
+    order = np.argsort(-avail)
+    best = [tuple(x) for x in
+            zip(cands.names[order[:5]], cands.regions[order[:5]], cands.azs[order[:5]])]
+    worst = [tuple(x) for x in
+             zip(cands.names[order[-5:]], cands.regions[order[-5:]], cands.azs[order[-5:]])]
+    res_best = probe_real_availability(mkt, best, n_nodes=10,
+                                       period_min=30, duration_min=360)
+    res_worst = probe_real_availability(mkt, worst, n_nodes=10,
+                                        period_min=30, duration_min=360)
+    ra_best = np.mean([r.real_availability for r in res_best])
+    ra_worst = np.mean([r.real_availability for r in res_worst])
+    assert ra_best > ra_worst + 20.0
+
+
+def test_weight_tradeoff_direction(world):
+    """Fig 16: lower W -> cheaper pools; higher W -> more available pools."""
+    _, _, col = world
+    cands = col.to_candidate_set()
+    eng = RecommendationEngine()
+    recs = {w: eng.recommend(cands, ResourceRequest(cpus=128.0, weight=w))
+            for w in (0.0, 0.5, 1.0)}
+    assert recs[0.0].hourly_cost <= recs[1.0].hourly_cost + 1e-9
+    assert recs[1.0].availability.mean() >= recs[0.0].availability.mean() - 1e-9

@@ -1,0 +1,96 @@
+"""USQS sampler + TSTP binary-search tests against synthetic SPS staircases."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tstp import find_transition_points, full_scan
+from repro.core.usqs import T3Estimator, USQSSampler, run_usqs
+from repro.core.entropy import empirical_entropy, max_entropy
+
+
+def staircase(t3, t2):
+    """Monotone SPS(n): 3 for n<=t3, 2 for n<=t2, else 1."""
+    def q(n):
+        if n <= t3:
+            return 3
+        if n <= t2:
+            return 2
+        return 1
+    return q
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, 50), st.integers(0, 50))
+def test_tstp_exact(t3, t2):
+    t2 = max(t2, t3)
+    q = staircase(t3, t2)
+    res = find_transition_points(q, 1, 50)
+    assert res.t3 == t3
+    assert res.t2 == t2
+    assert res.queries <= 14  # 2 * ceil(log2(50)) + slack
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 50), st.integers(0, 5), st.integers(0, 6))
+def test_tstp_early_stop_error_bounded(t3, drift, e):
+    q = staircase(t3, t3)
+    cache = find_transition_points(staircase(max(t3 - drift, 0), max(t3 - drift, 0)), 1, 50)
+    res = find_transition_points(q, 1, 50, cache=cache, early_stop=e)
+    assert abs(res.t3 - t3) <= max(e, 0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(0, 50), st.integers(0, 4))
+def test_tstp_cache_reduces_queries(t3, drift):
+    """Warm-started search near the true value uses fewer probes."""
+    q = staircase(t3, t3)
+    cold = find_transition_points(q, 1, 50)
+    warm = find_transition_points(
+        q, 1, 50, cache=find_transition_points(
+            staircase(min(t3 + drift, 50), min(t3 + drift, 50)), 1, 50))
+    assert warm.t3 == t3
+    if drift == 0:
+        assert warm.queries <= cold.queries
+
+
+def test_usqs_sampler_cycles():
+    s = USQSSampler(5, 50, 5)
+    targets = list(s.targets(22))
+    assert targets[:10] == [5, 10, 15, 20, 25, 30, 35, 40, 45, 50]
+    assert targets[10] == 5  # wraps
+    assert s.cycle_length == 10
+
+
+def test_usqs_estimator_static():
+    q = staircase(23, 30)
+    sampler = USQSSampler(5, 50, 5)
+    t3s, _, n = run_usqs(q, sampler, cycles=10)
+    # after a full sweep the estimate is t3 rounded down to the grid
+    assert t3s[-1] == 20
+    assert n == 10  # one query per cycle
+
+
+def test_usqs_estimator_tracks_change():
+    # T3 drops mid-collection; estimator must invalidate stale highs
+    state = {"t3": 40}
+    def q(n):
+        return 3 if n <= state["t3"] else 1
+    sampler = USQSSampler(5, 50, 5)
+    est = T3Estimator(sampler.grid)
+    for t in range(10):
+        tc = sampler.next_target()
+        est.observe(tc, q(tc), t)
+    assert est.t3() == 40
+    state["t3"] = 10
+    for t in range(10, 20):
+        tc = sampler.next_target()
+        est.observe(tc, q(tc), t)
+    assert est.t3() == 10
+
+
+def test_entropy_bounds():
+    assert empirical_entropy([1, 1, 1, 1]) == 0.0
+    h = empirical_entropy(list(range(11)))
+    assert h == pytest.approx(max_entropy(11))
+    skewed = [0] * 30 + [50] * 40 + list(range(5, 50, 5)) * 3
+    assert empirical_entropy(skewed) < max_entropy(11)
