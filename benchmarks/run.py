@@ -23,6 +23,7 @@ MODULES = [
     "fig13_16_sensitivity",
     "table2_3_fig17_pool",
     "fig18_19_recommendation",
+    "serve_throughput",
     "kernels_micro",
     "roofline",
 ]

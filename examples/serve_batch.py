@@ -1,74 +1,84 @@
-"""Batched serving example: prefill a prompt batch, decode N tokens.
+"""Batched recommendation serving: the SpotVista web-service path end-to-end.
 
-Runs a reduced config of any assigned architecture on CPU:
+Collects a (simulated) T3 archive, stages it on device, then serves a burst
+of heterogeneous requests through the BatchServer — fused batched scoring +
+pool formation — and compares wall-clock against the per-request loop:
 
-    PYTHONPATH=src python examples/serve_batch.py --arch rwkv6-7b --tokens 16
+    PYTHONPATH=src python examples/serve_batch.py --requests 48
+
+(The former LLM decoding demo lives in examples/serve_model.py.)
 """
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs.registry import ARCH_IDS, get_config
-from repro.models import get_model
+from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                            SpotMarket, SPSQueryService)
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.serve import BatchServer
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-0.5b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--targets", type=int, default=80)
+    ap.add_argument("--cycles", type=int, default=30)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.requests < 1:
+        ap.error("--requests must be >= 1")
 
-    cfg = get_config(args.arch).reduced()
-    model = get_model(cfg)
-    params = model.init(jax.random.key(0))
-    print(f"{args.arch} (reduced): {model.num_params() / 1e6:.1f}M params")
+    # 1. a simulated cloud + collected T3 archive (see examples/quickstart.py)
+    market = SpotMarket(Catalog(seed=args.seed, n_regions=2), seed=args.seed)
+    service = SPSQueryService(market, n_accounts=2000)
+    targets = [(t.name, r, az) for (t, r, az) in market.pool_keys[::7]][:args.targets]
+    collector = DataCollector(service, targets, CollectorConfig(mode="usqs"))
+    print(f"collecting {args.cycles} USQS cycles over {len(targets)} pools ...")
+    collector.run(args.cycles)
+    cands = collector.to_candidate_set()
 
-    B, P = args.batch, args.prompt_len
-    key = jax.random.key(1)
-    prompt = jax.random.randint(key, (B, P), 0, cfg.vocab_size, jnp.int32)
-    batch = {"tokens": prompt}
-    if cfg.encdec:
-        batch["frames"] = jax.random.normal(
-            key, (B, cfg.frontend_len, cfg.d_model)).astype(jnp.bfloat16)
-    if cfg.frontend == "vision":
-        batch["prefix_embeds"] = jax.random.normal(
-            key, (B, cfg.frontend_len, cfg.d_model)).astype(jnp.bfloat16)
+    # 2. a burst of heterogeneous user requests (mixed targets and filters)
+    rng = np.random.default_rng(args.seed)
+    regions = sorted(set(cands.regions))
+    reqs = []
+    for i in range(args.requests):
+        kw = ({"cpus": float(rng.integers(16, 640))} if i % 3 else
+              {"memory_gb": float(rng.integers(64, 2048))})
+        if i % 4 == 0:
+            kw["regions"] = [regions[i % len(regions)]]
+        reqs.append(ResourceRequest(weight=float(rng.uniform(0.2, 0.8)), **kw))
 
-    max_len = P + args.tokens + (cfg.frontend_len if cfg.frontend == "vision" else 0)
-    cache = model.init_cache(B, max_len)
-
+    # 3. serve them batched (archive staged on device, bucketed dispatch)
+    engine = RecommendationEngine()
+    server = BatchServer(engine)
+    server.serve(cands, reqs)              # warm the per-bucket compile caches
     t0 = time.perf_counter()
-    prefill = jax.jit(model.prefill)
-    logits, cache = prefill(params, batch, cache)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
+    recs = server.serve(cands, reqs)
+    t_batch = time.perf_counter() - t0
 
-    decode = jax.jit(model.decode_step)
-    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-    generated = [tok]
-    start = P + (cfg.frontend_len if cfg.frontend == "vision" else 0)
+    # 4. the same work through the per-request loop
+    for r in reqs:                         # warm every (filter, K_sub) shape
+        engine.recommend(cands, r)
     t0 = time.perf_counter()
-    for i in range(args.tokens - 1):
-        key, sub = jax.random.split(key)
-        logits, cache = decode(params, tok, cache, jnp.int32(start + i))
-        tok = jax.random.categorical(
-            sub, logits[:, -1].astype(jnp.float32) / args.temperature
-        )[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.perf_counter() - t0
+    for r in reqs:
+        engine.recommend(cands, r)
+    t_loop = time.perf_counter() - t0
 
-    out = jnp.concatenate(generated, axis=1)
-    print(f"prefill: {t_prefill * 1e3:.1f} ms for {B}x{P} tokens")
-    print(f"decode : {t_decode / max(args.tokens - 1, 1) * 1e3:.2f} ms/token "
-          f"(batch {B})")
-    for b in range(min(B, 2)):
-        print(f"seq{b}: {[int(x) for x in out[b][:12]]}...")
+    print(f"\nserved {len(recs)} requests over {len(cands)} candidates")
+    print(f"  batched : {t_batch * 1e3:7.1f} ms "
+          f"({len(recs) / t_batch:8.0f} req/s)")
+    print(f"  loop    : {t_loop * 1e3:7.1f} ms "
+          f"({len(recs) / t_loop:8.0f} req/s)")
+    print(f"  speedup : {t_loop / t_batch:.1f}x   "
+          f"buckets={server.stats.bucket_counts} "
+          f"padded={server.stats.padded_slots}")
+
+    rec = recs[0]
+    print(f"\nfirst request -> {rec.num_types} types, "
+          f"${rec.hourly_cost:.2f}/hr:")
+    for n, az, cnt, s in zip(rec.names, rec.azs, rec.counts, rec.combined):
+        print(f"  {n:<16} {az:<12} x{int(cnt):<3} S={s:6.2f}")
 
 
 if __name__ == "__main__":

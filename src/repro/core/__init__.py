@@ -10,13 +10,18 @@
 - baselines : SpotVerse / SpotFleet / naive single-point (§6.4)
 - engine    : recommendation facade (§4, Fig. 3)
 """
-from .types import CandidateSet, Recommendation, ResourceRequest  # noqa: F401
+from .types import (  # noqa: F401
+    CandidateSet, Recommendation, RequestBatch, ResourceRequest,
+)
 from .engine import RecommendationEngine  # noqa: F401
 from .scoring import (  # noqa: F401
-    availability_scores, combined_scores, cost_scores,
-    DEFAULT_LAMBDA, DEFAULT_WEIGHT,
+    availability_scores, availability_scores_masked, combined_scores,
+    cost_scores, cost_scores_masked, DEFAULT_LAMBDA, DEFAULT_WEIGHT,
 )
-from .pool import PoolResult, greedy_pool, greedy_pool_vectorized, ilp_pool  # noqa: F401
+from .pool import (  # noqa: F401
+    PoolResult, greedy_pool, greedy_pool_masked, greedy_pool_vectorized,
+    ilp_pool,
+)
 from .usqs import USQSSampler, T3Estimator, run_usqs  # noqa: F401
 from .tstp import TSTPResult, find_transition_points, full_scan  # noqa: F401
 from .entropy import empirical_entropy, max_entropy  # noqa: F401

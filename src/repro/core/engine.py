@@ -9,25 +9,63 @@ slice for the scoring window), the engine:
 3. forms the heterogeneous pool with the greedy heuristic (Algorithm 1).
 
 This is the exact code path the public web service's FaaS handler would call.
+
+Two entry points:
+
+- :meth:`RecommendationEngine.recommend` — one request at a time; gathers the
+  filtered subset and round-trips scores through numpy between stages.
+- :meth:`RecommendationEngine.recommend_batch` — B requests in one fused,
+  vmapped dispatch.  Filtering is expressed as per-request boolean masks over
+  the full candidate axis (static shapes — no per-filter recompiles), and
+  Eq. 2-4 scoring plus the all-prefix Algorithm 1 run as a single XLA
+  computation.  Bit-compatible with the per-request loop (see
+  ``recommend_batch``'s docstring for the exact guarantee); ``serve/`` adds
+  the bucketing + archive-cache layer on top.
 """
 from __future__ import annotations
 
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from . import pool as pool_lib
 from . import scoring
-from .types import CandidateSet, Recommendation, ResourceRequest
+from .types import CandidateSet, Recommendation, RequestBatch, ResourceRequest
 
 
-def _filter_mask(c: CandidateSet, req: ResourceRequest) -> np.ndarray:
-    mask = np.ones(len(c), bool)
-    for values, col in (
-        (req.regions, c.regions), (req.azs, c.azs), (req.families, c.families),
-        (req.categories, c.categories), (req.types, c.names),
-    ):
-        if values is not None:
-            mask &= np.isin(col, np.asarray(values))
-    return mask
+# ---------------------------------------------------------------------------
+# Fused batched path: Eq. 3 -> Eq. 2 -> Eq. 4 -> Algorithm 1, one dispatch.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _fused_recommend_batch(t3, prices, vcpus, memory_gb,
+                           masks, use_cpus, weights, lams, amounts):
+    """Eq. 3 -> Eq. 2 -> Eq. 4 -> Algorithm 1 for B masked requests, fused
+    into one XLA computation (each stage vmapped over the batch axis)."""
+    caps = jnp.where(use_cpus[:, None], vcpus[None, :],
+                     memory_gb[None, :]).astype(jnp.float32)       # (B, K)
+    avail = jax.vmap(scoring.availability_scores_masked,
+                     in_axes=(None, 0, 0))(t3, lams, masks)
+    cost = jax.vmap(scoring.cost_scores_masked,
+                    in_axes=(None, 0, 0, 0))(prices, caps, amounts, masks)
+    comb = scoring.combined_scores(avail, cost, weights[:, None])
+    order, counts, k_stop, any_term = jax.vmap(
+        pool_lib.greedy_pool_masked)(comb, caps, amounts, masks)
+    return comb, avail, cost, order, counts, k_stop, any_term
+
+
+def _apply_max_types(idx: np.ndarray, counts: np.ndarray, comb: np.ndarray,
+                     caps: np.ndarray, amount: float, max_types: int | None):
+    """Cap pool diversity: keep the top-scoring members, re-allocate."""
+    if max_types is None or len(idx) <= max_types:
+        return idx, counts
+    keep = idx[:max_types]
+    s = comb[keep]
+    r = s / s.sum() * amount
+    counts = np.ceil(r / caps[keep]).astype(np.int64)
+    return keep, counts
 
 
 class RecommendationEngine:
@@ -45,7 +83,7 @@ class RecommendationEngine:
         return comb, avail, cost
 
     def recommend(self, cands: CandidateSet, req: ResourceRequest) -> Recommendation:
-        mask = _filter_mask(cands, req)
+        mask = req.filter_mask(cands)
         if not mask.any():
             raise ValueError("no candidates satisfy the request filters")
         sub = cands.take(np.flatnonzero(mask))
@@ -54,14 +92,10 @@ class RecommendationEngine:
         form = (pool_lib.greedy_pool_vectorized if self._use_vectorized
                 else pool_lib.greedy_pool)
         result = form(comb, np.asarray(req.capacity_of(sub), np.float64), req.amount)
-        idx, counts = result.indices, result.counts
-        if req.max_types is not None and len(idx) > req.max_types:
-            # Keep the top-scoring max_types members, re-allocate proportionally.
-            keep = idx[:req.max_types]
-            s = comb[keep]
-            r = s / s.sum() * req.amount
-            counts = np.ceil(r / np.asarray(req.capacity_of(sub), np.float64)[keep]).astype(np.int64)
-            idx = keep
+        idx, counts = _apply_max_types(
+            result.indices, result.counts, comb,
+            np.asarray(req.capacity_of(sub), np.float64), req.amount,
+            req.max_types)
         hourly = float((sub.prices[idx] * counts).sum())
         return Recommendation(
             names=sub.names[idx], regions=sub.regions[idx], azs=sub.azs[idx],
@@ -73,3 +107,73 @@ class RecommendationEngine:
                 "solve_time_s": result.solve_time_s,
             },
         )
+
+    def recommend_batch(self, cands: CandidateSet, requests,
+                        *, pad_to: int | None = None,
+                        archive=None) -> list[Recommendation]:
+        """Serve B requests in one fused dispatch; order matches ``requests``.
+
+        Parity with calling :meth:`recommend` per request: the recommended
+        pool is bit-identical — same members in the same order, same node
+        counts, same hourly cost, same diagnostics — and the reported scores
+        agree to the last float32 ulp.  (Exact score bits can differ because
+        XLA FMA-contracts the elementwise scoring chains differently for the
+        gathered (K_sub,) and the masked (B, K) compilations; the cross-
+        candidate reductions themselves — MinMax, C_min, prefix sums — are
+        masked, not gathered, precisely so they stay exact.)
+
+        ``pad_to`` pads the batch axis so the serve layer can bound the set
+        of compiled (B, K) shapes; padded rows are computed-and-discarded.
+        ``archive`` is an optional :class:`repro.serve.DeviceArchive` whose
+        device-resident arrays skip the per-call host->device transfer of
+        the candidate set.
+        """
+        requests = list(requests)
+        if not requests:
+            return []
+        t0 = time.perf_counter()
+        batch = RequestBatch.from_requests(cands, requests, pad_to=pad_to)
+        if archive is not None:
+            t3, prices, vcpus, memory_gb = (
+                archive.t3, archive.prices, archive.vcpus, archive.memory_gb)
+        else:
+            # Same float32 staging as DeviceArchive so both entry points hit
+            # one compiled signature (the kernels cast to float32 regardless).
+            t3, prices, vcpus, memory_gb = (
+                jnp.asarray(cands.t3, jnp.float32),
+                jnp.asarray(cands.prices, jnp.float32),
+                jnp.asarray(cands.vcpus, jnp.float32),
+                jnp.asarray(cands.memory_gb, jnp.float32))
+        comb, avail, cost, order, counts, k_stop, _ = jax.device_get(
+            _fused_recommend_batch(
+                t3, prices, vcpus, memory_gb, batch.masks, batch.use_cpus,
+                batch.weights, batch.lams, batch.amounts))
+        solve_time = time.perf_counter() - t0
+
+        recs = []
+        for b, req in enumerate(requests):
+            sel = counts[b] > 0
+            idx = np.asarray(order[b])[sel].astype(np.int64)
+            cnt = np.asarray(counts[b])[sel].astype(np.int64)
+            caps = np.asarray(req.capacity_of(cands), np.float64)
+            idx, cnt = _apply_max_types(idx, cnt, comb[b], caps, req.amount,
+                                        req.max_types)
+            hourly = float((cands.prices[idx] * cnt).sum())
+            n_real = int(batch.masks[b].sum())
+            # Match the sequential path's iteration count: a stop at the first
+            # padded lane is the gathered scan running out of candidates, which
+            # greedy_pool_vectorized reports as argmax-of-all-false == 0 -> 1.
+            iters = int(k_stop[b]) + 1 if int(k_stop[b]) < n_real else 1
+            recs.append(Recommendation(
+                names=cands.names[idx], regions=cands.regions[idx],
+                azs=cands.azs[idx], counts=cnt, combined=comb[b][idx],
+                availability=avail[b][idx], cost=cost[b][idx],
+                hourly_cost=hourly,
+                diagnostics={
+                    "candidates_considered": n_real,
+                    "greedy_iterations": iters,
+                    "solve_time_s": solve_time,
+                    "batch_size": batch.batch_size,
+                },
+            ))
+        return recs

@@ -98,9 +98,8 @@ def greedy_pool(scores, cpus, required: float) -> PoolResult:
 # Algorithm 1 — vectorised JAX implementation (production path).
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def _greedy_pool_core(scores: jax.Array, cpus: jax.Array, required: jax.Array):
-    """All-prefix formulation of Algorithm 1.
+def _prefix_allocations(s: jax.Array, c: jax.Array, required: jax.Array):
+    """All-prefix formulation of Algorithm 1 over pre-sorted (s, c).
 
     For the score-descending ordering, compute the allocation matrix for every
     prefix length k simultaneously::
@@ -110,9 +109,6 @@ def _greedy_pool_core(scores: jax.Array, cpus: jax.Array, required: jax.Array):
     and evaluate the termination conditions as masks.  Returns the allocation
     row of the last prefix before the first terminating prefix.
     """
-    order = jnp.argsort(-scores, stable=True)
-    s = scores[order].astype(jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
-    c = cpus[order].astype(s.dtype)
     K = s.shape[0]
     s_tot = jnp.cumsum(s)                                    # (K,) prefix sums
     s_tot = jnp.where(s_tot > 0, s_tot, 1.0)
@@ -135,6 +131,41 @@ def _greedy_pool_core(scores: jax.Array, cpus: jax.Array, required: jax.Array):
     fallback = jnp.zeros_like(counts_sorted).at[0].set(
         jnp.ceil(required / c[0]).astype(jnp.int32))
     counts_sorted = jnp.where((any_term & (k_stop == 0)), fallback, counts_sorted)
+    return counts_sorted, k_stop, any_term
+
+
+@jax.jit
+def _greedy_pool_core(scores: jax.Array, cpus: jax.Array, required: jax.Array):
+    order = jnp.argsort(-scores, stable=True)
+    s = scores[order].astype(jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    c = cpus[order].astype(s.dtype)
+    counts_sorted, k_stop, any_term = _prefix_allocations(s, c, required)
+    return order, counts_sorted, k_stop, any_term
+
+
+def greedy_pool_masked(scores: jax.Array, cpus: jax.Array, required: jax.Array,
+                       mask: jax.Array):
+    """Algorithm 1 over the ``mask`` lanes of a full-width candidate axis.
+
+    Masked-out candidates sort strictly after every valid one (sort key
+    ``+inf``) and contribute score 0 to the prefix sums, so their allocation is
+    0 and the ``newest == 0`` condition terminates the prefix scan no later
+    than the first masked lane — exactly where the gathered-subset scan would
+    have run out of candidates.  Prefixes over valid lanes are bitwise
+    identical to ``_greedy_pool_core`` on the gathered subset (zeros appended
+    to a cumsum do not perturb earlier partial sums), which is what makes the
+    batched path bit-compatible with per-request ``recommend``.
+
+    Trace-safe (no host sync): composes under ``jax.vmap`` / ``jax.jit``.
+    Returns ``(order, counts_sorted, k_stop, any_term)`` like the core.
+    """
+    dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    key = jnp.where(mask, -scores, jnp.inf)
+    order = jnp.argsort(key, stable=True)
+    mask_sorted = mask[order]
+    s = jnp.where(mask_sorted, scores[order], 0.0).astype(dtype)
+    c = jnp.where(mask_sorted, cpus[order], 1.0).astype(dtype)
+    counts_sorted, k_stop, any_term = _prefix_allocations(s, c, required)
     return order, counts_sorted, k_stop, any_term
 
 

@@ -44,6 +44,21 @@ def _safe_minmax(x: jax.Array) -> jax.Array:
     return jnp.where(rng > 0, (x - lo) / jnp.where(rng > 0, rng, 1.0), jnp.zeros_like(x))
 
 
+def _masked_minmax(x: jax.Array, mask: jax.Array) -> jax.Array:
+    """MinMax where lo/hi are taken over ``mask`` lanes only.
+
+    Masked-out lanes still get a (finite, garbage) value — the batched
+    recommendation path discards them downstream.  On the valid lanes the
+    result is bitwise identical to ``_safe_minmax`` over the gathered subset:
+    min/max are exact regardless of lane count and the normalisation itself is
+    elementwise.
+    """
+    lo = jnp.min(jnp.where(mask, x, jnp.inf))
+    hi = jnp.max(jnp.where(mask, x, -jnp.inf))
+    rng = hi - lo
+    return jnp.where(rng > 0, (x - lo) / jnp.where(rng > 0, rng, 1.0), jnp.zeros_like(x))
+
+
 def _regression_slopes(t3: jax.Array) -> jax.Array:
     """Closed-form least-squares slope of each row against uniform time."""
     T = t3.shape[-1]
@@ -106,6 +121,40 @@ def pool_costs(prices: jax.Array, cpus: jax.Array, required_cpus) -> jax.Array:
 def combined_scores(avail: jax.Array, cost: jax.Array, weight: float | jax.Array = DEFAULT_WEIGHT) -> jax.Array:
     """Eq. 4: S_i = W * AS_i + (1 - W) * CS_i."""
     return weight * avail + (1.0 - weight) * cost
+
+
+# ---------------------------------------------------------------------------
+# Masked variants — the fused batched serving path (serve/BatchServer).
+#
+# ``recommend`` gathers the filtered candidate subset before scoring, which
+# makes every request a different array shape (a recompile per filter result).
+# The batched path instead keeps the full (K,)-shaped candidate axis and
+# threads a per-request boolean ``mask`` through every cross-candidate
+# reduction, so B heterogeneous requests vmap over a single static shape.
+# On valid lanes the outputs are bitwise identical to the gathered versions.
+# ---------------------------------------------------------------------------
+
+def availability_scores_masked(
+    t3: jax.Array, lam: float | jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Eq. 3 with MinMax normalisations restricted to ``mask`` lanes."""
+    t3 = jnp.asarray(t3, jnp.float32)
+    w = jnp.ones(t3.shape[-1], jnp.float32).at[0].set(0.5).at[-1].set(0.5)
+    a3 = _masked_minmax(t3 @ w, mask)
+    slope = _masked_minmax(_regression_slopes(t3), mask)
+    sigma = _masked_minmax(jnp.std(t3, axis=-1), mask)
+    return jnp.clip(100.0 * a3 * (1.0 + lam * (slope - sigma)), 0.0, None)
+
+
+def cost_scores_masked(
+    prices: jax.Array, cpus: jax.Array, required: jax.Array, mask: jax.Array
+) -> jax.Array:
+    """Eq. 2 with C_min taken over ``mask`` lanes only."""
+    prices = jnp.asarray(prices, jnp.float32)
+    cpus = jnp.asarray(cpus, jnp.float32)
+    total = prices * jnp.ceil(required / cpus)
+    c_min = jnp.min(jnp.where(mask, total, jnp.inf))
+    return 100.0 * c_min / total
 
 
 # ---------------------------------------------------------------------------

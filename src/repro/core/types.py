@@ -1,6 +1,7 @@
 """Shared datatypes for the recommendation engine."""
 from __future__ import annotations
 
+import hashlib
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -37,6 +38,21 @@ class CandidateSet:
             prices=self.prices[idx], t3=self.t3[idx],
         )
 
+    def fingerprint(self) -> str:
+        """Content hash of the archive slice — the serve-layer cache key.
+
+        Covers every array that feeds scoring or pool formation, so two
+        slices with the same fingerprint are interchangeable on device.
+        """
+        h = hashlib.blake2b(digest_size=16)
+        for a in (self.names, self.regions, self.azs, self.families,
+                  self.categories, self.vcpus, self.memory_gb, self.prices,
+                  self.t3):
+            a = np.ascontiguousarray(a)
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        return h.hexdigest()
+
 
 @dataclass
 class ResourceRequest:
@@ -63,6 +79,69 @@ class ResourceRequest:
 
     def capacity_of(self, cands: CandidateSet) -> np.ndarray:
         return cands.vcpus if self.cpus is not None else cands.memory_gb
+
+    def filter_mask(self, cands: CandidateSet) -> np.ndarray:
+        """Boolean mask of candidates surviving this request's filters."""
+        mask = np.ones(len(cands), bool)
+        for values, col in (
+            (self.regions, cands.regions), (self.azs, cands.azs),
+            (self.families, cands.families), (self.categories, cands.categories),
+            (self.types, cands.names),
+        ):
+            if values is not None:
+                mask &= np.isin(col, np.asarray(values))
+        return mask
+
+
+@dataclass
+class RequestBatch:
+    """A padded, array-of-structs view of B requests over one candidate axis.
+
+    This is the device-facing form the fused batched engine consumes: every
+    per-request quantity is a (B,)- or (B, K)-shaped array so the whole batch
+    dispatches as one XLA computation.  ``pad_to`` rounds B up with inert
+    dummy rows (all-true mask, amount 1) whose results are discarded — the
+    serve layer uses this to bound the set of compiled batch shapes.
+    """
+
+    masks: np.ndarray      # (B, K) bool — per-request filter survivors
+    use_cpus: np.ndarray   # (B,) bool — capacity axis: vcpus vs memory_gb
+    weights: np.ndarray    # (B,) float32 — W in Eq. 4
+    lams: np.ndarray       # (B,) float32 — lambda in Eq. 3
+    amounts: np.ndarray    # (B,) float32 — R_C / R_M
+    requests: list         # the n_valid original ResourceRequest objects
+    n_valid: int           # rows beyond this are padding
+
+    @classmethod
+    def from_requests(cls, cands: CandidateSet, requests,
+                      pad_to: int | None = None) -> "RequestBatch":
+        requests = list(requests)
+        n = len(requests)
+        if n == 0:
+            raise ValueError("empty request batch")
+        B = max(pad_to, n) if pad_to is not None else n
+        K = len(cands)
+        masks = np.ones((B, K), bool)
+        use_cpus = np.ones(B, bool)
+        weights = np.full(B, 0.5, np.float32)
+        lams = np.full(B, 0.1, np.float32)
+        amounts = np.ones(B, np.float32)
+        for b, req in enumerate(requests):
+            mask = req.filter_mask(cands)
+            if not mask.any():
+                raise ValueError(
+                    f"no candidates satisfy the request filters (batch row {b})")
+            masks[b] = mask
+            use_cpus[b] = req.cpus is not None
+            weights[b] = req.weight
+            lams[b] = req.lam
+            amounts[b] = req.amount
+        return cls(masks=masks, use_cpus=use_cpus, weights=weights, lams=lams,
+                   amounts=amounts, requests=requests, n_valid=n)
+
+    @property
+    def batch_size(self) -> int:
+        return self.masks.shape[0]
 
 
 @dataclass

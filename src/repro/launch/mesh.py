@@ -2,14 +2,24 @@
 import jax
 
 
+def compat_make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions.
+
+    Newer jax wants explicit ``axis_types`` (Auto) for GSPMD meshes; older
+    releases (<= 0.4.x) predate ``jax.sharding.AxisType`` and default to Auto.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat_make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke tests."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat_make_mesh((1, 1), ("data", "model"))

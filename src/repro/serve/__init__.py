@@ -1,0 +1,18 @@
+"""High-throughput serving layer over the recommendation engine (paper §4).
+
+SpotVista's public web service answers many concurrent queries against a
+shared candidate archive (Fig. 3: FaaS handlers in front of the object-store
+T3 archive).  This package provides the pieces the fused batched engine path
+(:meth:`repro.core.RecommendationEngine.recommend_batch`) needs to serve that
+shape of traffic efficiently:
+
+- :class:`DeviceArchive` — a candidate archive slice staged once on device,
+  so repeated batches don't re-pay the host->device transfer.
+- :class:`ArchiveCache` — a small LRU of staged archives keyed by archive
+  content fingerprint (multiple scoring windows stay hot).
+- :class:`BatchServer` — request bucketing to a fixed ladder of padded batch
+  sizes, bounding the number of XLA compilations to O(|buckets|) per archive
+  width instead of one per distinct batch size.
+"""
+from .archive import ArchiveCache, DeviceArchive  # noqa: F401
+from .server import BatchServer, ServeStats  # noqa: F401

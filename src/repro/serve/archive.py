@@ -1,0 +1,101 @@
+"""Device-staged candidate archives + LRU cache keyed by archive content.
+
+The T3 archive slice is the large, slowly-changing half of every request
+(K x T time-series matrix vs a handful of request scalars).  Staging it on
+device once and reusing it across batches removes the per-batch
+host->device transfer; the LRU keeps several scoring windows (or regional
+slices) hot at a bounded memory footprint.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from ..core.types import CandidateSet
+
+
+@dataclass(frozen=True)
+class DeviceArchive:
+    """A candidate set's numeric arrays, resident on the default device.
+
+    ``t3`` / ``prices`` / ``vcpus`` / ``memory_gb`` are float32 jax arrays —
+    exactly the operands :func:`repro.core.engine._fused_recommend_batch`
+    consumes (the fused path casts to float32 internally anyway, so staging
+    in float32 halves the transfer without changing any result bit).
+    ``host`` keeps the original :class:`CandidateSet` for filter-mask
+    construction and result materialisation (names, string columns, float64
+    prices for exact hourly-cost accounting).
+    """
+
+    key: str
+    host: CandidateSet
+    t3: jax.Array
+    prices: jax.Array
+    vcpus: jax.Array
+    memory_gb: jax.Array
+
+    @classmethod
+    def stage(cls, cands: CandidateSet, *, key: str | None = None) -> "DeviceArchive":
+        """Put a candidate set's numeric arrays on device."""
+        put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32))  # noqa: E731
+        return cls(
+            key=key if key is not None else cands.fingerprint(),
+            host=cands,
+            t3=put(cands.t3), prices=put(cands.prices),
+            vcpus=put(cands.vcpus), memory_gb=put(cands.memory_gb),
+        )
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in
+                   (self.t3, self.prices, self.vcpus, self.memory_gb))
+
+    def __len__(self) -> int:
+        return len(self.host)
+
+
+@dataclass
+class ArchiveCache:
+    """LRU of :class:`DeviceArchive` entries keyed by archive fingerprint.
+
+    ``get`` stages on miss and refreshes recency on hit.  Keys default to
+    :meth:`CandidateSet.fingerprint` (content hash), so a mutated or
+    re-collected archive naturally misses while an identical slice — even a
+    different object — hits.  Pass an explicit ``key`` (e.g. an object-store
+    ETag) to skip hashing large archives.
+    """
+
+    capacity: int = 4
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    _entries: OrderedDict = field(default_factory=OrderedDict)
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError("capacity must be >= 1")
+
+    def get(self, cands: CandidateSet, *, key: str | None = None) -> DeviceArchive:
+        key = key if key is not None else cands.fingerprint()
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.misses += 1
+        entry = DeviceArchive.stage(cands, key=key)
+        self._entries[key] = entry
+        while len(self._entries) > self.capacity:
+            self._entries.popitem(last=False)
+            self.evictions += 1
+        return entry
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(e.nbytes for e in self._entries.values())

@@ -1,0 +1,109 @@
+"""Batched recommendation server: bucketing + archive cache + stats.
+
+``BatchServer.serve`` is the synchronous core of the paper's web-service
+path: it takes whatever number of requests arrived in the current service
+interval, splits them into chunks from a fixed ladder of batch sizes
+(padding the tail chunk up to the smallest covering bucket), and runs each
+chunk through the fused :meth:`RecommendationEngine.recommend_batch`
+dispatch against a device-staged archive.
+
+Why bucketing: XLA compiles one program per (B, K) shape.  Serving raw
+arrival sizes would compile for every distinct B ever seen; snapping to a
+small ladder bounds compilations to ``len(bucket_sizes)`` per archive width
+while wasting at most the padding slots (whose rows are computed and
+discarded — allocation decisions for real requests are unaffected, see the
+RequestBatch padding contract).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..core.engine import RecommendationEngine
+from ..core.types import CandidateSet, Recommendation
+from .archive import ArchiveCache
+
+DEFAULT_BUCKETS = (1, 8, 64, 256)
+
+
+@dataclass
+class ServeStats:
+    """Counters accumulated across ``serve`` calls."""
+
+    requests: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+    bucket_counts: dict = field(default_factory=dict)   # bucket size -> #batches
+
+    def record(self, n_requests: int, bucket: int) -> None:
+        self.requests += n_requests
+        self.batches += 1
+        self.padded_slots += bucket - n_requests
+        self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
+
+
+class BatchServer:
+    """Serve request batches against cached device-staged archives.
+
+    Parameters
+    ----------
+    engine : RecommendationEngine, optional
+        The scoring/pool engine (a default one is built if omitted).
+    bucket_sizes : tuple[int, ...]
+        Allowed padded batch sizes, ascending.  Arrivals are chunked
+        greedily by the largest bucket, and the remainder is padded up to
+        the smallest bucket that covers it.
+    cache_capacity : int
+        Number of device-staged archives kept hot (LRU).
+    """
+
+    def __init__(self, engine: RecommendationEngine | None = None, *,
+                 bucket_sizes: tuple[int, ...] = DEFAULT_BUCKETS,
+                 cache_capacity: int = 4):
+        if not bucket_sizes or any(b < 1 for b in bucket_sizes):
+            raise ValueError("bucket_sizes must be positive")
+        self.engine = engine if engine is not None else RecommendationEngine()
+        self.bucket_sizes = tuple(sorted(set(bucket_sizes)))
+        self.cache = ArchiveCache(capacity=cache_capacity)
+        self.stats = ServeStats()
+
+    def plan_chunks(self, n: int) -> list[tuple[int, int]]:
+        """Split ``n`` requests into ``(chunk_len, bucket)`` pieces.
+
+        Pad the remainder up to the smallest covering bucket when at most
+        half of that bucket would be padding (padded rows are computed and
+        discarded); otherwise emit a full chunk of the largest bucket that
+        fits and continue.  Bounds both the dispatch count and the wasted
+        compute per serve call.
+        """
+        chunks = []
+        while n > 0:
+            cover = next((b for b in self.bucket_sizes if b >= n), None)
+            fits = [b for b in self.bucket_sizes if b <= n]
+            if cover is not None and (not fits or cover - n <= cover // 2):
+                chunks.append((n, cover))
+                break
+            fit = max(fits)
+            chunks.append((fit, fit))
+            n -= fit
+        return chunks
+
+    def serve(self, cands: CandidateSet, requests, *,
+              archive_key: str | None = None) -> list[Recommendation]:
+        """Recommend pools for ``requests``; results align with the input.
+
+        The candidate set is staged on device through the LRU cache (keyed
+        by content fingerprint, or ``archive_key`` when provided).
+        """
+        requests = list(requests)
+        if not requests:
+            return []
+        archive = self.cache.get(cands, key=archive_key)
+        out: list[Recommendation] = []
+        pos = 0
+        for chunk_len, bucket in self.plan_chunks(len(requests)):
+            chunk = requests[pos:pos + chunk_len]
+            pos += chunk_len
+            out.extend(self.engine.recommend_batch(
+                archive.host, chunk, pad_to=bucket, archive=archive))
+            self.stats.record(chunk_len, bucket)
+        return out

@@ -1,7 +1,9 @@
 """Algorithm 1 (greedy pool) properties + ILP cross-checks."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="install the [test] extra for property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import pool as pool_lib
 

@@ -1,8 +1,10 @@
 """Unit + property tests for the paper's scoring math (Eq. 2-4)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
+
+pytest.importorskip("hypothesis", reason="install the [test] extra for property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+import hypothesis.extra.numpy as hnp  # noqa: E402
 
 from repro.core import scoring
 

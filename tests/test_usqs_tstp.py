@@ -1,7 +1,9 @@
 """USQS sampler + TSTP binary-search tests against synthetic SPS staircases."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis", reason="install the [test] extra for property tests")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.tstp import find_transition_points, full_scan
 from repro.core.usqs import T3Estimator, USQSSampler, run_usqs
