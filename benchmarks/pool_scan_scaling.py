@@ -1,0 +1,282 @@
+"""Dense vs tiled pool-scan scaling: throughput + peak temp memory over K.
+
+Sweeps the Algorithm 1 all-prefix scan (``repro.core.pool``) across candidate
+counts K in {256 ... 32768} for both ``pool_impl`` choices:
+
+- ``dense`` — the K x K allocation-matrix formulation (O(K^2) temp memory,
+  measured from XLA's compiled ``memory_analysis``);
+- ``tiled`` — the streaming kernel in ``repro.kernels.pool_scan`` (O(K)).
+
+plus the batched acceptance pair: end-to-end ``recommend_batch`` requests/sec
+at (K=8192, B=16) dense vs tiled — the tiled path must clear >= 5x on CPU.
+Every executed K also cross-checks dense/tiled pool outputs bit-for-bit
+(and tiled vs the loop oracle beyond the dense execution ceiling).
+
+Modes::
+
+    python -m benchmarks.pool_scan_scaling                 # full sweep,
+        # writes the committed benchmarks/BENCH_pool_scan.json artifact
+    python -m benchmarks.pool_scan_scaling --smoke         # small-K sweep
+    python -m benchmarks.pool_scan_scaling --smoke --check benchmarks/BENCH_pool_scan.json
+        # CI lane: fail on dense/tiled divergence or >20% throughput
+        # regression of the tiled-over-dense speedup vs the artifact
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.core import pool as pool_lib
+from repro.core.types import CandidateSet
+from repro.kernels.pool_scan import DEFAULT_TILE
+
+from ._world import row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_pool_scan.json"
+
+K_SWEEP = (256, 1024, 4096, 8192, 16384, 32768)
+K_SMOKE = (256, 1024, 4096)
+DENSE_EXEC_MAX_K = 8192        # beyond this the K x K temp buffer is the point
+BATCH_PAIRS = ((4096, 16), (8192, 16))
+SMOKE_PAIR = (4096, 16)
+ACCEPT_PAIR = (8192, 16)
+LOOP_SECONDS = 0.6             # measurement budget per timing loop
+REGRESSION_TOLERANCE = 0.20    # CI check: allowed speedup regression
+# The committed dense/tiled speedup ratio is hardware-dependent (dense is
+# memory-bandwidth-bound, tiled compute-bound), so the CI gate derates the
+# reference to this cap: it trips on the tiled path losing its asymptotic
+# win (e.g. a reintroduced K^2 buffer collapses the ratio to ~1x), not on a
+# runner with different memory bandwidth than the machine that committed
+# the artifact.
+CHECK_SPEEDUP_CAP = 20.0
+
+
+def _bench(fn, *, min_reps: int = 2, budget: float = LOOP_SECONDS) -> float:
+    """Best-of wall-clock seconds for fn() under a fixed time budget."""
+    fn()                                   # warm (compile + caches)
+    best = np.inf
+    t_start = time.perf_counter()
+    reps = 0
+    while reps < min_reps or time.perf_counter() - t_start < budget:
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        reps += 1
+        if reps >= 50:
+            break
+    return best
+
+
+def _scan_instance(K: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.uniform(0.1, 100.0, K), jnp.float32)
+    c = jnp.asarray(rng.choice([2, 4, 8, 16, 32, 48, 64, 96], K)
+                    .astype(np.float32))
+    return s, c, jnp.float32(K * 4.0)
+
+
+def _synth_candidates(K: int, seed: int = 0, T: int = 24) -> CandidateSet:
+    rng = np.random.default_rng(seed)
+    fams = rng.choice(["m5", "c5", "r5", "t3"], K)
+    return CandidateSet(
+        names=np.array([f"{fams[i]}.x{i}" for i in range(K)]),
+        regions=rng.choice(["us-east-1", "eu-west-1", "ap-north-1"], K),
+        azs=rng.choice(["a", "b", "c"], K),
+        families=fams,
+        categories=rng.choice(["general", "compute", "memory"], K),
+        vcpus=rng.choice([2, 4, 8, 16, 32, 64, 96], K).astype(np.float64),
+        memory_gb=rng.choice([4, 8, 16, 64, 128, 384], K).astype(np.float64),
+        prices=rng.uniform(0.01, 5.0, K),
+        t3=rng.uniform(0.0, 50.0, (K, T)),
+    )
+
+
+def _requests(B: int, seed: int = 0) -> list[ResourceRequest]:
+    rng = np.random.default_rng(seed)
+    return [ResourceRequest(cpus=float(rng.integers(64, 4096)),
+                            weight=float(rng.uniform(0.2, 0.8)),
+                            lam=float(rng.uniform(0.05, 0.3)))
+            for _ in range(B)]
+
+
+def _temp_bytes(impl: str, s, c, r) -> int | None:
+    """Peak XLA temp allocation of the compiled scan (not executed)."""
+    try:
+        comp = pool_lib._greedy_pool_core.lower(s, c, r, impl=impl).compile()
+        return int(comp.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — memory_analysis is backend-dependent
+        return None
+
+
+def _scan_outputs_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(a, b))
+
+
+def _check_parity(K: int, *, dense_ok: bool) -> bool:
+    """Tiled vs dense pool output at K (vs the loop oracle beyond the dense
+    execution ceiling, where the K x K buffer is what we are avoiding)."""
+    s, c, r = _scan_instance(K)
+    tiled = jax.device_get(pool_lib._greedy_pool_core(s, c, r, impl="tiled"))
+    if dense_ok:
+        dense = jax.device_get(pool_lib._greedy_pool_core(s, c, r, impl="dense"))
+        return _scan_outputs_equal(dense, tiled)
+    order, counts, _, _ = tiled
+    sel = counts > 0
+    # float64 oracle vs float32 scan: exact because required is an integer
+    # and the continuous random scores keep every ceil() off its boundary
+    # (same caveat the tier-1 oracle tests document); seeds are fixed, so
+    # this comparison is deterministic, not flaky.
+    oracle = pool_lib.greedy_pool(np.asarray(s, np.float64),
+                                  np.asarray(c, np.float64), float(r))
+    return (list(oracle.indices) == list(np.asarray(order)[sel])
+            and list(oracle.counts) == list(counts[sel]))
+
+
+def _single_sweep(k_values) -> list[dict]:
+    out = []
+    for K in k_values:
+        s, c, r = _scan_instance(K)
+        dense_ok = K <= DENSE_EXEC_MAX_K
+        rec = {"K": K,
+               "dense_temp_bytes": _temp_bytes("dense", s, c, r),
+               "tiled_temp_bytes": _temp_bytes("tiled", s, c, r),
+               "dense_executed": dense_ok,
+               "parity": _check_parity(K, dense_ok=dense_ok)}
+        bench = lambda impl: _bench(lambda: jax.block_until_ready(
+            pool_lib._greedy_pool_core(s, c, r, impl=impl)))
+        rec["tiled_us"] = bench("tiled") * 1e6
+        rec["dense_us"] = bench("dense") * 1e6 if dense_ok else None
+        out.append(rec)
+    return out
+
+
+def _batched_pair(K: int, B: int) -> dict:
+    cands = _synth_candidates(K)
+    reqs = _requests(B)
+    rec = {"K": K, "B": B}
+    for impl in ("dense", "tiled"):
+        eng = RecommendationEngine(pool_impl=impl)
+        t = _bench(lambda: eng.recommend_batch(cands, reqs, pad_to=B))
+        rec[f"{impl}_us"] = t * 1e6
+        rec[f"{impl}_rps"] = B / t
+    rec["speedup"] = rec["dense_us"] / rec["tiled_us"]
+    return rec
+
+
+def _rows(single, batched) -> list[str]:
+    out = []
+    for r in single:
+        out.append(row(
+            f"pool_scan/K{r['K']}",
+            r["tiled_us"],
+            dense_us=None if r["dense_us"] is None else round(r["dense_us"], 1),
+            dense_temp_mb=None if r["dense_temp_bytes"] is None
+            else round(r["dense_temp_bytes"] / 2 ** 20, 2),
+            tiled_temp_mb=None if r["tiled_temp_bytes"] is None
+            else round(r["tiled_temp_bytes"] / 2 ** 20, 3),
+            parity=r["parity"]))
+    for b in batched:
+        out.append(row(f"pool_scan/batched_K{b['K']}_B{b['B']}",
+                       b["tiled_us"] / b["B"],
+                       dense_rps=round(b["dense_rps"], 1),
+                       tiled_rps=round(b["tiled_rps"], 1),
+                       speedup=round(b["speedup"], 2)))
+    return out
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size sweep."""
+    single = _single_sweep(K_SMOKE)
+    batched = [_batched_pair(*SMOKE_PAIR)]
+    if not all(r["parity"] for r in single):
+        raise AssertionError("tiled/dense pool outputs diverged")
+    return _rows(single, batched)
+
+
+def _full() -> dict:
+    single = _single_sweep(K_SWEEP)
+    batched = [_batched_pair(K, B) for K, B in BATCH_PAIRS]
+    accept = next(b for b in batched if (b["K"], b["B"]) == ACCEPT_PAIR)
+    smoke = next(b for b in batched if (b["K"], b["B"]) == SMOKE_PAIR)
+    max_k = max(K_SWEEP)
+    return {
+        "meta": {"backend": jax.default_backend(), "tile": DEFAULT_TILE,
+                 "dense_exec_max_k": DENSE_EXEC_MAX_K,
+                 "auto_threshold_k": pool_lib.POOL_TILED_AUTO_K},
+        "single": single,
+        "batched": batched,
+        "accept": {"K": accept["K"], "B": accept["B"],
+                   "speedup": accept["speedup"],
+                   "ge_5x": accept["speedup"] >= 5.0,
+                   "single_dispatch_max_K": max_k,
+                   "tiled_us_at_max_K":
+                       next(r for r in single if r["K"] == max_k)["tiled_us"]},
+        "smoke": {"K": smoke["K"], "B": smoke["B"],
+                  "speedup": smoke["speedup"]},
+    }
+
+
+def _check(artifact: Path) -> int:
+    """CI gate: parity at the smoke sizes + speedup regression vs artifact."""
+    committed = json.loads(artifact.read_text())
+    for K in K_SMOKE:
+        if not _check_parity(K, dense_ok=True):
+            print(f"# FAIL: tiled/dense pool outputs diverged at K={K}",
+                  file=sys.stderr)
+            return 1
+    smoke = _batched_pair(*SMOKE_PAIR)
+    ref = min(committed["smoke"]["speedup"], CHECK_SPEEDUP_CAP)
+    floor = (1.0 - REGRESSION_TOLERANCE) * ref
+    print(row(f"pool_scan/check_K{smoke['K']}_B{smoke['B']}",
+              smoke["tiled_us"] / smoke["B"],
+              speedup=round(smoke["speedup"], 2), committed=round(ref, 2),
+              floor=round(floor, 2)))
+    if smoke["speedup"] < floor:
+        print(f"# FAIL: tiled speedup {smoke['speedup']:.2f}x regressed >20% "
+              f"vs committed {ref:.2f}x", file=sys.stderr)
+        return 1
+    print("# pool_scan check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-K sweep only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_pool_scan.json "
+                         "and exit non-zero on divergence/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full sweep")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    if args.smoke:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)
+        return
+    payload = _full()
+    print("name,us_per_call,derived")
+    for line in _rows(payload["single"], payload["batched"]):
+        print(line)
+    if not all(r["parity"] for r in payload["single"]):
+        raise SystemExit("# FAIL: tiled/dense pool outputs diverged")
+    args.out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

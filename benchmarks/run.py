@@ -24,6 +24,7 @@ MODULES = [
     "table2_3_fig17_pool",
     "fig18_19_recommendation",
     "serve_throughput",
+    "pool_scan_scaling",
     "kernels_micro",
     "roofline",
 ]

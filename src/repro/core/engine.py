@@ -24,6 +24,7 @@ Two entry points:
 """
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -39,11 +40,18 @@ from .types import CandidateSet, Recommendation, RequestBatch, ResourceRequest
 # Fused batched path: Eq. 3 -> Eq. 2 -> Eq. 4 -> Algorithm 1, one dispatch.
 # ---------------------------------------------------------------------------
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("pool_impl",))
 def _fused_recommend_batch(t3, prices, vcpus, memory_gb,
-                           masks, use_cpus, weights, lams, amounts):
+                           masks, use_cpus, weights, lams, amounts,
+                           *, pool_impl: str = "dense"):
     """Eq. 3 -> Eq. 2 -> Eq. 4 -> Algorithm 1 for B masked requests, fused
-    into one XLA computation (each stage vmapped over the batch axis)."""
+    into one XLA computation (each stage vmapped over the batch axis).
+
+    ``pool_impl`` selects the all-prefix Algorithm 1 scan: the dense
+    O(B*K^2) allocation-matrix formulation, or the tiled streaming kernel
+    (O(B*K) memory) that lifts the candidate-fan-out ceiling — resolved, not
+    "auto", because the choice is a compile-time branch.
+    """
     caps = jnp.where(use_cpus[:, None], vcpus[None, :],
                      memory_gb[None, :]).astype(jnp.float32)       # (B, K)
     avail = jax.vmap(scoring.availability_scores_masked,
@@ -52,7 +60,8 @@ def _fused_recommend_batch(t3, prices, vcpus, memory_gb,
                     in_axes=(None, 0, 0, 0))(prices, caps, amounts, masks)
     comb = scoring.combined_scores(avail, cost, weights[:, None])
     order, counts, k_stop, any_term = jax.vmap(
-        pool_lib.greedy_pool_masked)(comb, caps, amounts, masks)
+        functools.partial(pool_lib.greedy_pool_masked, impl=pool_impl)
+    )(comb, caps, amounts, masks)
     return comb, avail, cost, order, counts, k_stop, any_term
 
 
@@ -69,10 +78,22 @@ def _apply_max_types(idx: np.ndarray, counts: np.ndarray, comb: np.ndarray,
 
 
 class RecommendationEngine:
-    """Stateless scoring + pool formation over a candidate archive slice."""
+    """Stateless scoring + pool formation over a candidate archive slice.
 
-    def __init__(self, *, use_vectorized_pool: bool = True):
+    ``pool_impl`` selects the Algorithm 1 all-prefix scan: ``"dense"``
+    (O(K^2) allocation matrix), ``"tiled"`` (streaming kernel, O(K) memory —
+    required for archives of tens of thousands of candidates), or ``"auto"``
+    (default: tiled from ``pool_lib.POOL_TILED_AUTO_K`` candidates up).
+    Both produce bit-identical pools.
+    """
+
+    def __init__(self, *, use_vectorized_pool: bool = True,
+                 pool_impl: str = "auto"):
+        if pool_impl not in pool_lib.POOL_IMPLS:
+            raise ValueError(
+                f"pool_impl must be one of {pool_lib.POOL_IMPLS}, got {pool_impl!r}")
         self._use_vectorized = use_vectorized_pool
+        self.pool_impl = pool_impl
 
     def score(self, cands: CandidateSet, req: ResourceRequest):
         """Return (combined S, availability AS, cost CS) for all candidates."""
@@ -89,8 +110,11 @@ class RecommendationEngine:
         sub = cands.take(np.flatnonzero(mask))
         comb, avail, cost = self.score(sub, req)
 
-        form = (pool_lib.greedy_pool_vectorized if self._use_vectorized
-                else pool_lib.greedy_pool)
+        if self._use_vectorized:
+            form = functools.partial(pool_lib.greedy_pool_vectorized,
+                                     impl=self.pool_impl)
+        else:
+            form = pool_lib.greedy_pool
         result = form(comb, np.asarray(req.capacity_of(sub), np.float64), req.amount)
         idx, counts = _apply_max_types(
             result.indices, result.counts, comb,
@@ -144,10 +168,11 @@ class RecommendationEngine:
                 jnp.asarray(cands.prices, jnp.float32),
                 jnp.asarray(cands.vcpus, jnp.float32),
                 jnp.asarray(cands.memory_gb, jnp.float32))
+        impl = pool_lib.resolve_pool_impl(self.pool_impl, len(cands))
         comb, avail, cost, order, counts, k_stop, _ = jax.device_get(
             _fused_recommend_batch(
                 t3, prices, vcpus, memory_gb, batch.masks, batch.use_cpus,
-                batch.weights, batch.lams, batch.amounts))
+                batch.weights, batch.lams, batch.amounts, pool_impl=impl))
         solve_time = time.perf_counter() - t0
 
         recs = []

@@ -6,18 +6,30 @@ Three implementations are provided:
                              the oracle used by property tests.
 - ``greedy_pool_vectorized``: the same algorithm expressed as one vectorised
                              JAX computation over *all* candidate prefixes at
-                             once (an O(K^2) outer product of prefix score
-                             sums against per-candidate node requirements,
-                             with the two termination conditions evaluated as
-                             masks).  This is the production path — jit-able,
+                             once.  This is the production path — jit-able,
                              accelerator-friendly, and bit-identical to the
-                             loop version.
+                             loop version.  It has two interchangeable
+                             all-prefix scan implementations selected by
+                             ``pool_impl``:
+
+                             * ``"dense"`` — an O(K^2) outer product of
+                               prefix score sums against per-candidate node
+                               requirements, termination conditions as masks
+                               (fastest for small K, memory-bound beyond a
+                               few thousand candidates);
+                             * ``"tiled"`` — the streaming O(K) kernel in
+                               :mod:`repro.kernels.pool_scan` (Pallas on
+                               TPU, ``lax.scan`` tiles elsewhere) that never
+                               materializes the K x K allocation matrix;
+                             * ``"auto"`` (default) — ``"tiled"`` from
+                               ``POOL_TILED_AUTO_K`` candidates up.
 - ``ilp_pool``             : the paper's comparison ILP (score + diversity
                              bonus objective), solved with scipy's HiGHS MILP
                              (stands in for PuLP+CBC, which is unavailable).
 """
 from __future__ import annotations
 
+import functools
 import math
 import time
 from dataclasses import dataclass, field
@@ -25,6 +37,25 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from ..kernels.pool_scan import _clamped_prefix_sums, pool_scan
+
+#: "auto" switches from the dense K x K scan to the tiled streaming kernel at
+#: this many candidates: below it the one-shot dense formulation amortizes
+#: better than the sequential tile scan; above it the K^2 buffer dominates
+#: both memory and runtime (see benchmarks/pool_scan_scaling.py).
+POOL_TILED_AUTO_K = 512
+
+POOL_IMPLS = ("dense", "tiled", "auto")
+
+
+def resolve_pool_impl(impl: str, k: int) -> str:
+    """Resolve the ``pool_impl`` switch for a K-candidate scan."""
+    if impl not in POOL_IMPLS:
+        raise ValueError(f"pool_impl must be one of {POOL_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "tiled" if k >= POOL_TILED_AUTO_K else "dense"
+    return impl
 
 
 @dataclass
@@ -98,7 +129,8 @@ def greedy_pool(scores, cpus, required: float) -> PoolResult:
 # Algorithm 1 — vectorised JAX implementation (production path).
 # ---------------------------------------------------------------------------
 
-def _prefix_allocations(s: jax.Array, c: jax.Array, required: jax.Array):
+def _prefix_allocations(s: jax.Array, c: jax.Array, required: jax.Array,
+                        *, impl: str = "dense", tile: int | None = None):
     """All-prefix formulation of Algorithm 1 over pre-sorted (s, c).
 
     For the score-descending ordering, compute the allocation matrix for every
@@ -108,10 +140,17 @@ def _prefix_allocations(s: jax.Array, c: jax.Array, required: jax.Array):
 
     and evaluate the termination conditions as masks.  Returns the allocation
     row of the last prefix before the first terminating prefix.
+
+    ``impl="dense"`` materializes X (O(K^2) memory); ``impl="tiled"`` streams
+    the same statistics through :func:`repro.kernels.pool_scan.pool_scan` in
+    O(K + tile) memory with identical pool output.
     """
+    if impl == "tiled":
+        return pool_scan(s, c, required, tile=tile)
     K = s.shape[0]
-    s_tot = jnp.cumsum(s)                                    # (K,) prefix sums
-    s_tot = jnp.where(s_tot > 0, s_tot, 1.0)
+    # Shared with the tiled kernel: identical staging is what makes the two
+    # implementations bit-identical, so keep it in one place.
+    s_tot = _clamped_prefix_sums(s)                          # (K,) prefix sums
     # X[k, j]: allocation of candidate j within prefix k (j <= k).
     raw = s[None, :] * required / (s_tot[:, None] * c[None, :])
     X = jnp.ceil(raw).astype(jnp.int32)
@@ -134,17 +173,20 @@ def _prefix_allocations(s: jax.Array, c: jax.Array, required: jax.Array):
     return counts_sorted, k_stop, any_term
 
 
-@jax.jit
-def _greedy_pool_core(scores: jax.Array, cpus: jax.Array, required: jax.Array):
+@functools.partial(jax.jit, static_argnames=("impl", "tile"))
+def _greedy_pool_core(scores: jax.Array, cpus: jax.Array, required: jax.Array,
+                      *, impl: str = "dense", tile: int | None = None):
     order = jnp.argsort(-scores, stable=True)
     s = scores[order].astype(jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
     c = cpus[order].astype(s.dtype)
-    counts_sorted, k_stop, any_term = _prefix_allocations(s, c, required)
+    counts_sorted, k_stop, any_term = _prefix_allocations(
+        s, c, required, impl=impl, tile=tile)
     return order, counts_sorted, k_stop, any_term
 
 
 def greedy_pool_masked(scores: jax.Array, cpus: jax.Array, required: jax.Array,
-                       mask: jax.Array):
+                       mask: jax.Array, *, impl: str = "dense",
+                       tile: int | None = None):
     """Algorithm 1 over the ``mask`` lanes of a full-width candidate axis.
 
     Masked-out candidates sort strictly after every valid one (sort key
@@ -158,6 +200,9 @@ def greedy_pool_masked(scores: jax.Array, cpus: jax.Array, required: jax.Array,
 
     Trace-safe (no host sync): composes under ``jax.vmap`` / ``jax.jit``.
     Returns ``(order, counts_sorted, k_stop, any_term)`` like the core.
+    ``impl`` selects the all-prefix scan ("dense" or "tiled", see module
+    docstring); it must be resolved (not "auto") by the caller because the
+    choice is trace-static.
     """
     dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
     key = jnp.where(mask, -scores, jnp.inf)
@@ -165,16 +210,24 @@ def greedy_pool_masked(scores: jax.Array, cpus: jax.Array, required: jax.Array,
     mask_sorted = mask[order]
     s = jnp.where(mask_sorted, scores[order], 0.0).astype(dtype)
     c = jnp.where(mask_sorted, cpus[order], 1.0).astype(dtype)
-    counts_sorted, k_stop, any_term = _prefix_allocations(s, c, required)
+    counts_sorted, k_stop, any_term = _prefix_allocations(
+        s, c, required, impl=impl, tile=tile)
     return order, counts_sorted, k_stop, any_term
 
 
-def greedy_pool_vectorized(scores, cpus, required: float) -> PoolResult:
+def greedy_pool_vectorized(scores, cpus, required: float, *,
+                           impl: str = "auto") -> PoolResult:
     t0 = time.perf_counter()
-    scores = jnp.asarray(scores, jnp.float32)
-    cpus = jnp.asarray(cpus, jnp.float32)
+    # Honor the enabled precision end-to-end: staging through float32 when
+    # jax_enable_x64 is on would silently discard the x64 path the core
+    # selects for its prefix sums.
+    dtype = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    scores = jnp.asarray(scores, dtype)
+    cpus = jnp.asarray(cpus, dtype)
+    impl = resolve_pool_impl(impl, scores.shape[0])
     order, counts_sorted, k_stop, _ = jax.device_get(
-        _greedy_pool_core(scores, cpus, jnp.float32(required)))
+        _greedy_pool_core(scores, cpus, jnp.asarray(required, dtype),
+                          impl=impl))
     sel = counts_sorted > 0
     idx = np.asarray(order)[sel]
     return PoolResult(

@@ -4,6 +4,12 @@
 - rwkv6_scan      : chunked WKV6 linear-attention scan (state in VMEM)
 - rglru_scan      : chunked RG-LRU diagonal recurrence (log-depth in-chunk)
 - moe_gmm         : grouped expert matmul on (E, C, D) capacity buffers
+- pool_scan       : tiled Algorithm 1 all-prefix termination scan (O(K)
+                    memory vs the dense K x K matrix; SMEM scratch carry)
+                    with a ``lax.scan`` CPU/GPU fallback — the production
+                    large-K path behind ``core.pool``'s ``pool_impl``
 
-Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py
+(pool_scan's oracle is the dense scan + greedy_pool loop in core/pool.py,
+and its dispatch lives in pool_scan.pool_scan).
 """

@@ -1,0 +1,270 @@
+"""Tiled pool-scan kernel: Algorithm 1's all-prefix termination scan in
+O(K + TILE) memory instead of the dense K x K allocation matrix.
+
+The dense production path (``core.pool._prefix_allocations``) materializes
+
+    X[k, j] = ceil( s_j * R / (cumsum(s)[k] * c_j) )        for j <= k
+
+for every prefix k at once — an O(K^2) buffer (B x K x K under the batched
+engine's vmap), which caps the candidate fan-out per dispatch.  But the two
+termination statistics Algorithm 1 actually inspects are one column and the
+diagonal of X::
+
+    top[k]    = X[k, 0]   — depends only on s_0, c_0 and cumsum(s)[k]
+    newest[k] = X[k, k]   — depends only on s_k, c_k and cumsum(s)[k]
+
+so the scan needs the (K,) prefix-sum vector, not the matrix: compute it
+once with the *same* ``jnp.cumsum`` (and <=0 clamp) the dense path uses,
+stream the termination statistics over K_tile-sized blocks of it, and emit
+only the winning prefix's allocation row.  Nothing K x K ever exists;
+compute drops from O(K^2) to O(K).  Because every statistic is derived from
+the identical prefix-sum values with the identical multiply/divide order,
+the pool output is bit-identical to the dense scan by construction — not
+merely up to float reassociation.
+
+Two implementations share that schedule:
+
+- ``_pool_scan_lax``    : ``jax.lax.scan`` over (nt, TILE) stat blocks — the
+                          CPU/GPU fallback and the vmap-friendly path the
+                          batched engine uses off-TPU.  The row emission is
+                          a single fused elementwise pass (the winning
+                          prefix sum is a scalar, so no tiling is needed).
+- ``_pool_scan_pallas`` : a Pallas TPU kernel with the same per-tile math,
+                          grid ``(2, nt)`` (phase 0: stats scan, phase 1:
+                          tiled row emission) and the carry in SMEM scratch,
+                          following the ``rwkv6_scan`` grid/scratch idiom.
+                          Validated under ``interpret=True`` on CPU like the
+                          other kernels in this package.
+
+Both return ``(counts_sorted, k_stop, any_term)`` with semantics identical
+to the dense scan, so ``core.pool`` can switch implementations behind
+``pool_impl`` without perturbing any caller.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_TILE = 1024
+
+_INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _clamped_prefix_sums(s: jax.Array) -> jax.Array:
+    """Exactly the dense scan's prefix-sum staging (op-for-op)."""
+    s_tot = jnp.cumsum(s)
+    return jnp.where(s_tot > 0, s_tot, 1.0)
+
+
+def _pad_tiles(arrs, tile: int, pad_values):
+    """Reshape (K,) arrays to (nt, tile).  Padded lanes mimic masked
+    candidates (score 0, cpu 1, prefix sum 1) and the stats pass excludes
+    them from the termination vote, so padding never changes the result."""
+    K = arrs[0].shape[0]
+    nt = -(-K // tile)
+    pad = nt * tile - K
+    return [jnp.pad(a, (0, pad), constant_values=v).reshape(nt, tile)
+            for a, v in zip(arrs, pad_values)] + [nt]
+
+
+def _tile_stats(s_t, c_t, csc_t, idx, prev_top, s0, c0, required, k_total):
+    """Termination statistics for one tile of the precomputed prefix sums.
+
+    Float op order matches the dense scan exactly — ``(s * R) / (s_tot * c)``
+    on the shared clamped-cumsum values — which is what makes the streamed
+    pool output bit-identical to the dense one.
+    """
+    top = jnp.ceil(s0 * required / (csc_t * c0)).astype(jnp.int32)
+    newest = jnp.ceil(s_t * required / (csc_t * c_t)).astype(jnp.int32)
+    prev = jnp.concatenate([prev_top[None], top[:-1]])
+    term = (top >= prev) | (newest == 0)
+    term = jnp.where(idx == 0, newest == 0, term)         # x_prev_top = inf at k=0
+    term = term & (idx < k_total)                         # padded lanes never vote
+    has = jnp.any(term)
+    local = jnp.argmax(term).astype(jnp.int32)
+    return top, has, local
+
+
+def _finalize(found, k_stop, k_total):
+    """Dense-scan semantics for the reduction outputs."""
+    any_term = found
+    k_stop = jnp.where(found, k_stop, 0)                  # argmax of all-False
+    k_best = jnp.where(found, jnp.maximum(k_stop - 1, 0), k_total - 1)
+    return any_term, k_stop, k_best
+
+
+def _emit_row(s, c, required, stot_best, k_best, deg, c0, lane):
+    row = jnp.ceil(s * required / (stot_best * c)).astype(jnp.int32)
+    row = jnp.where(lane <= k_best, row, 0)
+    # Degenerate guard (termination at k=0): single-type pool on the leader.
+    fb0 = jnp.ceil(required / c0).astype(jnp.int32)
+    return jnp.where(deg, jnp.where(lane == 0, fb0, 0), row)
+
+
+def _pool_scan_lax(s: jax.Array, c: jax.Array, required: jax.Array,
+                   *, tile: int = DEFAULT_TILE):
+    """``jax.lax``-tiled fallback: stats scan over (nt, TILE) blocks, then
+    one fused elementwise emission of the winning row."""
+    K = s.shape[0]
+    csc = _clamped_prefix_sums(s)
+    s0, c0 = s[0], c[0]
+    s_tiles, c_tiles, csc_tiles, nt = _pad_tiles(
+        (s, c, csc), tile, (0, 1, 1))
+    idx_tiles = jnp.arange(nt * tile, dtype=jnp.int32).reshape(nt, tile)
+
+    def stats_step(carry, xs):
+        prev_top, found, k_stop = carry
+        s_t, c_t, csc_t, idx = xs
+        top, has, local = _tile_stats(
+            s_t, c_t, csc_t, idx, prev_top, s0, c0, required, K)
+        k_stop = jnp.where(has & ~found, idx[0] + local, k_stop)
+        return (top[-1], found | has, k_stop), None
+
+    init = (jnp.asarray(_INT32_MAX, jnp.int32), jnp.zeros((), bool),
+            jnp.zeros((), jnp.int32))
+    (_, found, k_stop), _ = jax.lax.scan(
+        stats_step, init, (s_tiles, c_tiles, csc_tiles, idx_tiles))
+
+    any_term, k_stop, k_best = _finalize(found, k_stop, K)
+    stot_best = csc[k_best]
+    deg = any_term & (k_stop == 0)
+    lane = jnp.arange(K, dtype=jnp.int32)
+    counts = _emit_row(s, c, required, stot_best, k_best, deg, c0, lane)
+    return counts, k_stop, any_term
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU kernel: same schedule, carry in SMEM scratch.
+# ---------------------------------------------------------------------------
+
+def _pool_scan_kernel(params_ref, s_ref, c_ref, csc_ref, counts_ref, stats_ref,
+                      ptop_scr, found_scr, kstop_scr, stot_scr, cscl_scr,
+                      kbest_scr, deg_scr, *, tile: int, k_total: int, nt: int):
+    p = pl.program_id(0)                                  # 0: stats, 1: emit
+    t = pl.program_id(1)
+    s0 = params_ref[0, 0]
+    c0 = params_ref[0, 1]
+    required = params_ref[0, 2]
+
+    @pl.when((p == 0) & (t == 0))
+    def _init():
+        ptop_scr[0] = jnp.asarray(_INT32_MAX, jnp.int32)
+        found_scr[0] = jnp.int32(0)
+        kstop_scr[0] = jnp.int32(0)
+        stot_scr[0] = jnp.ones((), s_ref.dtype)
+        cscl_scr[0] = jnp.ones((), s_ref.dtype)
+
+    lane = jnp.squeeze(jax.lax.broadcasted_iota(jnp.int32, (1, tile), 1), 0)
+
+    @pl.when(p == 0)
+    def _stats():
+        s_t = s_ref[0, :]
+        c_t = c_ref[0, :]
+        csc_t = csc_ref[0, :]
+        idx = t * tile + lane
+        top, has, local = _tile_stats(
+            s_t, c_t, csc_t, idx, ptop_scr[0], s0, c0, required, k_total)
+        cand_kstop = t * tile + local
+        # prefix sum of the last kept prefix k_stop-1: last lane of the
+        # previous tile (the carry) when the hit opens this tile, else the
+        # in-tile value at local-1 (masked reduce: Mosaic has no dynamic
+        # vector indexing).
+        csc_at_lm1 = jnp.sum(
+            jnp.where(lane == jnp.maximum(local - 1, 0), csc_t, 0))
+        cand_stot = jnp.where(
+            cand_kstop == 0, csc_t[0],
+            jnp.where(local == 0, cscl_scr[0], csc_at_lm1))
+        found = found_scr[0]
+        take = has & (found == 0)
+        kstop_scr[0] = jnp.where(take, cand_kstop, kstop_scr[0])
+        stot_scr[0] = jnp.where(take, cand_stot, stot_scr[0])
+        found_scr[0] = jnp.where(has, jnp.int32(1), found)
+        cscl_scr[0] = csc_t[-1]
+        ptop_scr[0] = top[-1]
+
+    @pl.when((p == 0) & (t == nt - 1))
+    def _finish():
+        found = found_scr[0] == 1
+        any_term, k_stop, k_best = _finalize(found, kstop_scr[0], k_total)
+        # not-found: the winning prefix is the full set, csc[K-1] (this tile)
+        last_local = (k_total - 1) - (nt - 1) * tile
+        stot_scr[0] = jnp.where(found, stot_scr[0], csc_ref[0, last_local])
+        kstop_scr[0] = k_stop
+        kbest_scr[0] = k_best
+        deg_scr[0] = (any_term & (k_stop == 0)).astype(jnp.int32)
+        stats_ref[0, 0] = k_stop
+        stats_ref[0, 1] = any_term.astype(jnp.int32)
+
+    @pl.when(p == 1)
+    def _emit():
+        idx = t * tile + lane
+        counts_ref[0, :] = _emit_row(
+            s_ref[0, :], c_ref[0, :], required, stot_scr[0], kbest_scr[0],
+            deg_scr[0] == 1, c0, idx)
+
+
+def _pool_scan_pallas(s: jax.Array, c: jax.Array, required: jax.Array,
+                      *, tile: int = DEFAULT_TILE, interpret: bool = False):
+    K = s.shape[0]
+    csc = _clamped_prefix_sums(s)        # O(K) XLA op, shared with dense
+    s_tiles, c_tiles, csc_tiles, nt = _pad_tiles(
+        (s, c, csc), tile, (0, 1, 1))
+    params = jnp.stack([s[0], c[0], jnp.asarray(required, s.dtype)]
+                       ).reshape(1, 3)
+    counts, stats = pl.pallas_call(
+        functools.partial(_pool_scan_kernel, tile=tile, k_total=K, nt=nt),
+        grid=(2, nt),
+        in_specs=[
+            pl.BlockSpec((1, 3), lambda p, t: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, tile), lambda p, t: (t, 0)),
+            pl.BlockSpec((1, tile), lambda p, t: (t, 0)),
+            pl.BlockSpec((1, tile), lambda p, t: (t, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile), lambda p, t: (t, 0)),
+            pl.BlockSpec((1, 2), lambda p, t: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nt, tile), jnp.int32),
+            jax.ShapeDtypeStruct((1, 2), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.SMEM((1,), jnp.int32),    # previous tile's last top[k]
+            pltpu.SMEM((1,), jnp.int32),    # termination found flag
+            pltpu.SMEM((1,), jnp.int32),    # k_stop
+            pltpu.SMEM((1,), s.dtype),      # prefix sum of winning prefix
+            pltpu.SMEM((1,), s.dtype),      # previous tile's last prefix sum
+            pltpu.SMEM((1,), jnp.int32),    # k_best
+            pltpu.SMEM((1,), jnp.int32),    # degenerate (k_stop == 0) flag
+        ],
+        interpret=interpret,
+    )(params, s_tiles, c_tiles, csc_tiles)
+    return counts.reshape(nt * tile)[:K], stats[0, 0], stats[0, 1].astype(bool)
+
+
+def pool_scan(s: jax.Array, c: jax.Array, required, *, tile: int | None = None,
+              backend: str | None = None, interpret: bool | None = None):
+    """Tiled all-prefix Algorithm 1 scan over pre-sorted ``(s, c)``.
+
+    Drop-in for the dense scan: returns ``(counts_sorted, k_stop, any_term)``
+    with identical semantics and bit-identical pool output.  ``backend=None``
+    picks the Pallas kernel on TPU and the ``lax.scan`` tiling elsewhere;
+    ``interpret`` forces the Pallas interpreter (tests).  Traceable under
+    ``jit`` / ``vmap``.
+    """
+    tile = DEFAULT_TILE if tile is None else tile
+    required = jnp.asarray(required, s.dtype)
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "lax"
+    if backend == "pallas":
+        interp = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        return _pool_scan_pallas(s, c, required, tile=tile, interpret=interp)
+    if backend != "lax":
+        raise ValueError(f"unknown pool_scan backend: {backend!r}")
+    return _pool_scan_lax(s, c, required, tile=tile)

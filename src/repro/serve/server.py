@@ -13,6 +13,14 @@ small ladder bounds compilations to ``len(bucket_sizes)`` per archive width
 while wasting at most the padding slots (whose rows are computed and
 discarded — allocation decisions for real requests are unaffected, see the
 RequestBatch padding contract).
+
+Along the candidate axis the engine picks the Algorithm 1 scan per archive
+width: dense O(K^2) for small archives, the tiled streaming kernel
+(``repro.kernels.pool_scan``) beyond ``POOL_TILED_AUTO_K`` candidates — so a
+bucket ladder over a SpotLake-scale multi-region archive (tens of thousands
+of (type, AZ) candidates) stays a single dispatch per chunk instead of
+splitting the K axis to fit the B x K x K buffer.  Override with the
+``pool_impl`` parameter.
 """
 from __future__ import annotations
 
@@ -54,14 +62,19 @@ class BatchServer:
         the smallest bucket that covers it.
     cache_capacity : int
         Number of device-staged archives kept hot (LRU).
+    pool_impl : str
+        Algorithm 1 scan selection ("dense" / "tiled" / "auto") for the
+        default-constructed engine; ignored when ``engine`` is provided
+        (configure that engine directly instead).
     """
 
     def __init__(self, engine: RecommendationEngine | None = None, *,
                  bucket_sizes: tuple[int, ...] = DEFAULT_BUCKETS,
-                 cache_capacity: int = 4):
+                 cache_capacity: int = 4, pool_impl: str = "auto"):
         if not bucket_sizes or any(b < 1 for b in bucket_sizes):
             raise ValueError("bucket_sizes must be positive")
-        self.engine = engine if engine is not None else RecommendationEngine()
+        self.engine = (engine if engine is not None
+                       else RecommendationEngine(pool_impl=pool_impl))
         self.bucket_sizes = tuple(sorted(set(bucket_sizes)))
         self.cache = ArchiveCache(capacity=cache_capacity)
         self.stats = ServeStats()

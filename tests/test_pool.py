@@ -1,9 +1,19 @@
-"""Algorithm 1 (greedy pool) properties + ILP cross-checks."""
+"""Algorithm 1 (greedy pool) properties + ILP cross-checks.
+
+Includes the hypothesis adversarial sweep for the tiled pool-scan kernel:
+``greedy_pool_masked`` (impl="tiled") must terminate exactly like the
+``greedy_pool`` loop oracle on duplicate scores, zero/negative score tails,
+all-masked and single-candidate lanes, and K exactly on a tile boundary.
+Deterministic tiled-kernel cases live in ``test_pool_scan.py`` (no
+hypothesis dependency).
+"""
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis", reason="install the [test] extra for property tests")
 from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
 
 from repro.core import pool as pool_lib
 
@@ -81,3 +91,63 @@ def test_greedy_runtime_scales():
     res = pool_lib.greedy_pool_vectorized(scores, cpus, 640.0)
     assert res.solve_time_s < 5.0
     assert res.num_types >= 1
+
+
+# ---------------------------------------------------------------------------
+# Tiled pool-scan kernel: adversarial parity with the loop oracle and the
+# dense scan (see repro.kernels.pool_scan; helpers shared with
+# test_pool_scan.py via _pool_helpers).
+# ---------------------------------------------------------------------------
+
+from _pool_helpers import (KW as _KW, TILE as _TILE, adversarial_instance,  # noqa: E402
+                           as_jax, masked_pool, random_mask)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), mask_seed=st.integers(0, 2 ** 31),
+       n_valid=st.integers(1, _KW), n_dup=st.integers(0, _KW),
+       zero_tail=st.integers(0, _KW - 1),
+       req=st.integers(32, 6000).map(lambda x: x / 4))
+def test_masked_tiled_matches_loop_oracle(seed, mask_seed, n_valid, n_dup,
+                                          zero_tail, req):
+    # req on quarter-integers for the same ceil()-boundary reason as above.
+    # n_valid == 1 is the single-candidate lane; masks hitting only the
+    # zero tail exercise the all-zero-score degenerate pool.
+    scores, cpus = adversarial_instance(seed, n_dup, zero_tail)
+    mask = random_mask(mask_seed, n_valid)
+    order, counts, _, _ = jax.device_get(masked_pool(
+        *as_jax(scores, cpus, req, mask), impl="tiled", tile=_TILE))
+    sel = counts > 0
+    valid = np.flatnonzero(mask)
+    oracle = pool_lib.greedy_pool(scores[valid], cpus[valid], req)
+    assert list(valid[oracle.indices]) == list(np.asarray(order)[sel])
+    assert list(oracle.counts) == list(counts[sel])
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), mask_seed=st.integers(0, 2 ** 31),
+       n_valid=st.integers(0, _KW), n_dup=st.integers(0, _KW),
+       zero_tail=st.integers(0, _KW - 1), neg_tail=st.integers(0, _KW - 1),
+       req=st.floats(8, 1500))
+def test_masked_tiled_matches_dense(seed, mask_seed, n_valid, n_dup,
+                                    zero_tail, neg_tail, req):
+    """Bit-parity with the dense scan on cases the oracle can't express
+    (negative tails keep sub-zero allocations; all-masked rows)."""
+    scores, cpus = adversarial_instance(seed, n_dup, zero_tail, neg_tail)
+    mask = random_mask(mask_seed, n_valid)
+    args = as_jax(scores, cpus, req, mask)
+    dense = jax.device_get(masked_pool(*args, impl="dense"))
+    tiled = jax.device_get(masked_pool(*args, impl="tiled", tile=_TILE))
+    for a, b in zip(dense, tiled):
+        np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2 ** 31), st.integers(2, 40),
+       st.integers(32, 6000).map(lambda x: x / 4))
+def test_vectorized_tiled_matches_loop_oracle(seed, k, req):
+    scores, cpus = _rand_instance(seed, k)
+    a = pool_lib.greedy_pool(scores, cpus, req)
+    b = pool_lib.greedy_pool_vectorized(scores, cpus, req, impl="tiled")
+    assert list(a.indices) == list(b.indices)
+    assert list(a.counts) == list(b.counts)
