@@ -25,6 +25,7 @@ MODULES = [
     "fig18_19_recommendation",
     "serve_throughput",
     "pool_scan_scaling",
+    "scoring_scaling",
     "kernels_micro",
     "roofline",
 ]

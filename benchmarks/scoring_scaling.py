@@ -1,0 +1,314 @@
+"""Dense vs tiled batched-scoring scaling: throughput + temp memory over K.
+
+Sweeps the batched engine's scoring stage (``repro.core.engine._batched_scores``)
+across candidate counts K for both ``score_impl`` choices at the paper's
+scoring window (7 days of 10-minute USQS samples, T = 1008; see
+``configs/spotvista.py``):
+
+- ``dense`` — the vmapped full-Eq. 3 path: every batch re-reduces the whole
+  (K, T) archive slice before the per-request masked normalisations;
+- ``tiled`` — the streaming masked kernel (``repro.kernels.score_fuse``)
+  over archive-cached per-candidate statistics (the steady-state serve
+  scenario: ``DeviceArchive.score_stats`` hits after the first batch), with
+  Eq. 3 MinMax bounds shared per unique filter mask.
+
+plus the acceptance pair: scoring-stage requests/sec at (K=32768, B=16) —
+the tiled path must clear >= 5x on CPU — and a worst-case variant where all
+B masks are distinct (the dedup degenerates to one extrema scan per
+request).  Every executed K cross-checks dense/tiled score outputs on valid
+lanes (float32-ulp budget) and the resulting pools bit-for-bit.
+
+Modes::
+
+    python -m benchmarks.scoring_scaling                  # full sweep,
+        # writes the committed benchmarks/BENCH_scoring.json artifact
+    python -m benchmarks.scoring_scaling --smoke          # small-K sweep
+    python -m benchmarks.scoring_scaling --smoke --check benchmarks/BENCH_scoring.json
+        # CI lane: fail on dense/tiled divergence or >20% throughput
+        # regression of the tiled-over-dense speedup vs the artifact
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.spotvista import CONFIG
+from repro.core import engine as engine_lib
+from repro.core import pool as pool_lib
+from repro.core import scoring
+
+from ._world import row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_scoring.json"
+
+#: the paper's scoring window: 7 days at one USQS cycle per 10 minutes
+T_WINDOW = int(CONFIG.window_days * 24 * 60 / CONFIG.collect_period_min)
+T_SMOKE = 168                  # CI lane: one week of hourly samples
+K_SWEEP = (256, 1024, 4096, 8192, 16384, 32768)
+K_SMOKE = (256, 1024, 4096)
+B = 16
+ACCEPT_PAIR = (32768, B)
+SMOKE_PAIR = (4096, B)
+LOOP_SECONDS = 0.6             # measurement budget per timing loop
+REGRESSION_TOLERANCE = 0.20    # CI check: allowed speedup regression
+# The committed dense/tiled speedup is dominated by the O(K*T) statistics
+# pass the tiled path amortises away, which scales with the runner's memory
+# bandwidth; the CI gate derates the reference to this cap so it trips on a
+# reintroduced per-batch (K, T) reduction, not on a slower runner.
+CHECK_SPEEDUP_CAP = 8.0
+
+# on valid lanes the two impls agree to FMA-contraction noise; scores live
+# at O(100), so this is a few float32 ulp (same budget as the test suites)
+SCORE_RTOL = 1e-5
+SCORE_ATOL = 1e-4
+
+
+def _bench(fn, *, min_reps: int = 2, budget: float = LOOP_SECONDS) -> float:
+    """Best-of wall-clock seconds for fn() under a fixed time budget."""
+    fn()                                   # warm (compile + caches)
+    best = np.inf
+    t_start = time.perf_counter()
+    reps = 0
+    while reps < min_reps or time.perf_counter() - t_start < budget:
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        reps += 1
+        if reps >= 50:
+            break
+    return best
+
+
+def _instance(K: int, T: int, seed: int = 0):
+    """Device-staged archive columns + a request batch (no filters)."""
+    rng = np.random.default_rng(seed)
+    t3 = jnp.asarray(rng.random((K, T), dtype=np.float32) * 50.0)
+    prices = jnp.asarray(rng.uniform(0.01, 5.0, K), jnp.float32)
+    vcpus = jnp.asarray(rng.choice([2, 4, 8, 16, 32, 64, 96], K)
+                        .astype(np.float32))
+    mems = jnp.asarray(rng.choice([4, 8, 16, 64, 128, 384], K)
+                       .astype(np.float32))
+    masks = np.ones((B, K), bool)
+    use_cpus = jnp.asarray(rng.random(B) < 0.5)
+    weights = jnp.asarray(rng.uniform(0.2, 0.8, B), jnp.float32)
+    lams = jnp.asarray(rng.uniform(0.05, 0.3, B), jnp.float32)
+    amounts = jnp.asarray(rng.integers(64, 4096, B).astype(np.float32))
+    return t3, prices, vcpus, mems, masks, use_cpus, weights, lams, amounts
+
+
+def _distinct_masks(K: int, seed: int = 1) -> np.ndarray:
+    """B pairwise-distinct ~90%-dense masks: the dedup worst case."""
+    rng = np.random.default_rng(seed)
+    masks = rng.random((B, K)) < 0.9
+    masks[:, 0] = True                       # at least one shared valid lane
+    return masks
+
+
+def _stage_args(inst, masks, impl: str, stats):
+    t3, prices, vcpus, mems, _, use_cpus, weights, lams, amounts = inst
+    if impl == "tiled":
+        uniq, inv = engine_lib._dedup_masks(masks)
+        return (t3, prices, vcpus, mems, jnp.asarray(masks), use_cpus,
+                weights, lams, amounts, stats, jnp.asarray(uniq),
+                jnp.asarray(inv))
+    return (t3, prices, vcpus, mems, jnp.asarray(masks), use_cpus,
+            weights, lams, amounts, None, None, None)
+
+
+def _run_stage(inst, masks, impl: str, stats=None):
+    """One scoring-stage dispatch exactly as the engine issues it.
+
+    ``tiled`` includes the per-batch host mask dedup; ``stats`` stands in
+    for the archive-cached statistics (``DeviceArchive.score_stats``), the
+    steady-state serve scenario.
+    """
+    return engine_lib._batched_scores(*_stage_args(inst, masks, impl, stats),
+                                      score_impl=impl)
+
+
+def _check_outputs(inst, masks, stats) -> bool:
+    """Valid-lane score parity + bit-identical pools across the two impls."""
+    dense = jax.device_get(_run_stage(inst, masks, "dense"))
+    tiled = jax.device_get(_run_stage(inst, masks, "tiled", stats))
+    for a, b in zip(dense, tiled):
+        if not np.allclose(a[masks], b[masks], rtol=SCORE_RTOL,
+                           atol=SCORE_ATOL):
+            return False
+    _, prices, vcpus, mems, _, use_cpus, _, _, amounts = inst
+    caps = jnp.where(use_cpus[:, None], vcpus[None, :], mems[None, :])
+    pool = jax.vmap(lambda s, c, r, m: pool_lib.greedy_pool_masked(
+        s, c, r, m, impl="tiled"))
+    pd = jax.device_get(pool(jnp.asarray(dense[0]), caps, amounts,
+                             jnp.asarray(masks)))
+    pt = jax.device_get(pool(jnp.asarray(tiled[0]), caps, amounts,
+                             jnp.asarray(masks)))
+    return all(np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(pd, pt))
+
+
+def _temp_bytes(inst, masks, impl: str, stats) -> int | None:
+    """Peak XLA temp allocation of the compiled stage (not executed)."""
+    try:
+        comp = engine_lib._batched_scores.lower(
+            *_stage_args(inst, masks, impl, stats),
+            score_impl=impl).compile()
+        return int(comp.memory_analysis().temp_size_in_bytes)
+    except Exception:  # noqa: BLE001 — memory_analysis is backend-dependent
+        return None
+
+
+def _measure_pair(K: int, T: int) -> dict:
+    inst = _instance(K, T)
+    masks = inst[4]
+    stats = scoring.candidate_stats(inst[0])
+    jax.block_until_ready(stats)
+    rec = {"K": K, "B": B, "T": T,
+           "parity": _check_outputs(inst, masks, stats),
+           "dense_temp_bytes": _temp_bytes(inst, masks, "dense", None),
+           "tiled_temp_bytes": _temp_bytes(inst, masks, "tiled", stats)}
+    t_dense = _bench(lambda: jax.block_until_ready(
+        _run_stage(inst, masks, "dense")))
+    t_tiled = _bench(lambda: jax.block_until_ready(
+        _run_stage(inst, masks, "tiled", stats)))
+    rec["stats_us"] = _bench(lambda: jax.block_until_ready(
+        scoring.candidate_stats(inst[0]))) * 1e6
+    rec.update(dense_us=t_dense * 1e6, tiled_us=t_tiled * 1e6,
+               dense_rps=B / t_dense, tiled_rps=B / t_tiled,
+               speedup=t_dense / t_tiled)
+    return rec
+
+
+def _measure_distinct(K: int, T: int) -> dict:
+    """Worst case for the mask dedup: all B filter masks distinct."""
+    inst = _instance(K, T)
+    masks = _distinct_masks(K)
+    stats = scoring.candidate_stats(inst[0])
+    jax.block_until_ready(stats)
+    t_dense = _bench(lambda: jax.block_until_ready(
+        _run_stage(inst, masks, "dense")))
+    t_tiled = _bench(lambda: jax.block_until_ready(
+        _run_stage(inst, masks, "tiled", stats)))
+    return {"K": K, "B": B, "T": T,
+            "parity": _check_outputs(inst, masks, stats),
+            "dense_us": t_dense * 1e6, "tiled_us": t_tiled * 1e6,
+            "speedup": t_dense / t_tiled}
+
+
+def _rows(single, distinct) -> list[str]:
+    out = []
+    for r in single:
+        out.append(row(
+            f"scoring/K{r['K']}_T{r['T']}",
+            r["tiled_us"] / r["B"],
+            dense_rps=round(r["dense_rps"], 1),
+            tiled_rps=round(r["tiled_rps"], 1),
+            speedup=round(r["speedup"], 2),
+            stats_us=round(r["stats_us"], 1),
+            dense_temp_mb=None if r["dense_temp_bytes"] is None
+            else round(r["dense_temp_bytes"] / 2 ** 20, 2),
+            tiled_temp_mb=None if r["tiled_temp_bytes"] is None
+            else round(r["tiled_temp_bytes"] / 2 ** 20, 2),
+            parity=r["parity"]))
+    for r in distinct:
+        out.append(row(f"scoring/distinct_masks_K{r['K']}_T{r['T']}",
+                       r["tiled_us"] / r["B"],
+                       speedup=round(r["speedup"], 2), parity=r["parity"]))
+    return out
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size sweep."""
+    single = [_measure_pair(K, T_SMOKE) for K in K_SMOKE]
+    distinct = [_measure_distinct(SMOKE_PAIR[0], T_SMOKE)]
+    if not all(r["parity"] for r in single + distinct):
+        raise AssertionError("tiled/dense scoring outputs diverged")
+    return _rows(single, distinct)
+
+
+def _full() -> dict:
+    single = [_measure_pair(K, T_WINDOW) for K in K_SWEEP]
+    smoke = _measure_pair(SMOKE_PAIR[0], T_SMOKE)
+    distinct = [_measure_distinct(*p) for p in
+                ((ACCEPT_PAIR[0], T_WINDOW), (SMOKE_PAIR[0], T_SMOKE))]
+    accept = next(r for r in single if r["K"] == ACCEPT_PAIR[0])
+    return {
+        "meta": {"backend": jax.default_backend(), "B": B,
+                 "T_window": T_WINDOW, "T_smoke": T_SMOKE,
+                 "auto_threshold_k": scoring.SCORE_TILED_AUTO_K},
+        "single": single,
+        "distinct_masks": distinct,
+        "accept": {"K": accept["K"], "B": accept["B"], "T": accept["T"],
+                   "dense_rps": accept["dense_rps"],
+                   "tiled_rps": accept["tiled_rps"],
+                   "speedup": accept["speedup"],
+                   "ge_5x": accept["speedup"] >= 5.0},
+        "smoke": {"K": smoke["K"], "B": smoke["B"], "T": smoke["T"],
+                  "speedup": smoke["speedup"]},
+    }
+
+
+def _check(artifact: Path) -> int:
+    """CI gate: parity at the smoke sizes + speedup regression vs artifact."""
+    committed = json.loads(artifact.read_text())
+    for K in K_SMOKE:
+        inst = _instance(K, T_SMOKE)
+        stats = scoring.candidate_stats(inst[0])
+        if not (_check_outputs(inst, inst[4], stats)
+                and _check_outputs(inst, _distinct_masks(K), stats)):
+            print(f"# FAIL: tiled/dense scoring outputs diverged at K={K}",
+                  file=sys.stderr)
+            return 1
+    smoke = _measure_pair(SMOKE_PAIR[0], T_SMOKE)
+    ref = min(committed["smoke"]["speedup"], CHECK_SPEEDUP_CAP)
+    floor = (1.0 - REGRESSION_TOLERANCE) * ref
+    print(row(f"scoring/check_K{smoke['K']}_B{smoke['B']}",
+              smoke["tiled_us"] / smoke["B"],
+              speedup=round(smoke["speedup"], 2), committed=round(ref, 2),
+              floor=round(floor, 2)))
+    if smoke["speedup"] < floor:
+        print(f"# FAIL: tiled speedup {smoke['speedup']:.2f}x regressed >20% "
+              f"vs committed {ref:.2f}x", file=sys.stderr)
+        return 1
+    print("# scoring check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-K sweep only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_scoring.json "
+                         "and exit non-zero on divergence/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full sweep")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    if args.smoke:
+        print("name,us_per_call,derived")
+        for line in run():
+            print(line)
+        return
+    payload = _full()
+    print("name,us_per_call,derived")
+    for line in _rows(payload["single"], payload["distinct_masks"]):
+        print(line)
+    if not all(r["parity"] for r in payload["single"]):
+        raise SystemExit("# FAIL: tiled/dense scoring outputs diverged")
+    args.out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

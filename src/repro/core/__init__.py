@@ -15,8 +15,9 @@ from .types import (  # noqa: F401
 )
 from .engine import RecommendationEngine  # noqa: F401
 from .scoring import (  # noqa: F401
-    availability_scores, availability_scores_masked, combined_scores,
-    cost_scores, cost_scores_masked, DEFAULT_LAMBDA, DEFAULT_WEIGHT,
+    availability_scores, availability_scores_masked, candidate_stats,
+    CandidateStats, combined_scores, cost_scores, cost_scores_masked,
+    DEFAULT_LAMBDA, DEFAULT_WEIGHT, resolve_score_impl, SCORE_TILED_AUTO_K,
 )
 from .pool import (  # noqa: F401
     PoolResult, greedy_pool, greedy_pool_masked, greedy_pool_vectorized,

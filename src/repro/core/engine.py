@@ -33,6 +33,7 @@ import numpy as np
 
 from . import pool as pool_lib
 from . import scoring
+from ..kernels import score_fuse as score_fuse_lib
 from .types import CandidateSet, Recommendation, RequestBatch, ResourceRequest
 
 
@@ -40,25 +41,89 @@ from .types import CandidateSet, Recommendation, RequestBatch, ResourceRequest
 # Fused batched path: Eq. 3 -> Eq. 2 -> Eq. 4 -> Algorithm 1, one dispatch.
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("pool_impl",))
+def _dedup_masks(masks: np.ndarray):
+    """Collapse identical filter masks: ``(unique_masks, inverse)``.
+
+    The Eq. 3 MinMax bounds depend only on (stats, mask), so requests that
+    share a filter combination share one extrema scan.  A batch of
+    filterless requests — the common serve case — collapses to one row.
+    The unique count is padded to the next power of two (extra rows repeat
+    row 0, computed-and-ignored) so the set of compiled (U, K) shapes stays
+    bounded at log2(B) per batch shape.
+    """
+    packed = np.packbits(masks, axis=1)
+    index: dict = {}
+    rows: list[int] = []
+    inv = np.empty(masks.shape[0], np.int32)
+    for b in range(masks.shape[0]):
+        key = packed[b].tobytes()
+        i = index.setdefault(key, len(rows))
+        if i == len(rows):
+            rows.append(b)
+        inv[b] = i
+    u_pad = 1 << (len(rows) - 1).bit_length()
+    rows = rows + [rows[0]] * (u_pad - len(rows))
+    return masks[np.asarray(rows)], inv
+
+
+@functools.partial(jax.jit, static_argnames=("score_impl",))
+def _batched_scores(t3, prices, vcpus, memory_gb, masks, use_cpus,
+                    weights, lams, amounts, stats=None, uniq_masks=None,
+                    uniq_inv=None, *, score_impl: str = "dense"):
+    """The batched scoring stage: (B, K) combined / availability / cost.
+
+    ``score_impl="dense"`` is the vmapped full-Eq. 3 evaluation (re-reduces
+    the (K, T) archive slice every call).  ``"tiled"`` runs the streaming
+    masked kernel over precomputed per-candidate ``stats`` (computed here
+    from ``t3`` when not supplied by the archive cache), with the Eq. 3
+    MinMax bounds shared per unique filter mask (``uniq_masks``/``uniq_inv``
+    from :func:`_dedup_masks`).
+    """
+    if score_impl == "tiled":
+        if stats is None:
+            stats = scoring.candidate_stats(t3)
+        area, slope, std = stats
+        lo_u, hi_u = jax.vmap(
+            lambda m: score_fuse_lib.stat_extrema(area, slope, std, m)
+        )(uniq_masks)
+        lo_b, hi_b = lo_u[uniq_inv], hi_u[uniq_inv]
+        comb, avail, cost = jax.vmap(
+            lambda m, uc, amt, lam, wt, lo, hi: score_fuse_lib.score_fuse(
+                area, slope, std, prices, vcpus, memory_gb, m, uc, amt,
+                lam, wt, extrema=(lo, hi))
+        )(masks, use_cpus, amounts, lams, weights, lo_b, hi_b)
+        return comb, avail, cost
+    avail = jax.vmap(scoring.availability_scores_masked,
+                     in_axes=(None, 0, 0))(t3, lams, masks)
+    caps = jnp.where(use_cpus[:, None], vcpus[None, :],
+                     memory_gb[None, :]).astype(jnp.float32)       # (B, K)
+    cost = jax.vmap(scoring.cost_scores_masked,
+                    in_axes=(None, 0, 0, 0))(prices, caps, amounts, masks)
+    comb = scoring.combined_scores(avail, cost, weights[:, None])
+    return comb, avail, cost
+
+
+@functools.partial(jax.jit, static_argnames=("pool_impl", "score_impl"))
 def _fused_recommend_batch(t3, prices, vcpus, memory_gb,
                            masks, use_cpus, weights, lams, amounts,
-                           *, pool_impl: str = "dense"):
+                           stats=None, uniq_masks=None, uniq_inv=None,
+                           *, pool_impl: str = "dense",
+                           score_impl: str = "dense"):
     """Eq. 3 -> Eq. 2 -> Eq. 4 -> Algorithm 1 for B masked requests, fused
     into one XLA computation (each stage vmapped over the batch axis).
 
     ``pool_impl`` selects the all-prefix Algorithm 1 scan: the dense
     O(B*K^2) allocation-matrix formulation, or the tiled streaming kernel
-    (O(B*K) memory) that lifts the candidate-fan-out ceiling — resolved, not
-    "auto", because the choice is a compile-time branch.
+    (O(B*K) memory) that lifts the candidate-fan-out ceiling.  ``score_impl``
+    selects the scoring stage the same way (see :func:`_batched_scores`).
+    Both are resolved, not "auto", because the choice is a compile-time
+    branch.
     """
     caps = jnp.where(use_cpus[:, None], vcpus[None, :],
                      memory_gb[None, :]).astype(jnp.float32)       # (B, K)
-    avail = jax.vmap(scoring.availability_scores_masked,
-                     in_axes=(None, 0, 0))(t3, lams, masks)
-    cost = jax.vmap(scoring.cost_scores_masked,
-                    in_axes=(None, 0, 0, 0))(prices, caps, amounts, masks)
-    comb = scoring.combined_scores(avail, cost, weights[:, None])
+    comb, avail, cost = _batched_scores(
+        t3, prices, vcpus, memory_gb, masks, use_cpus, weights, lams,
+        amounts, stats, uniq_masks, uniq_inv, score_impl=score_impl)
     order, counts, k_stop, any_term = jax.vmap(
         functools.partial(pool_lib.greedy_pool_masked, impl=pool_impl)
     )(comb, caps, amounts, masks)
@@ -72,7 +137,13 @@ def _apply_max_types(idx: np.ndarray, counts: np.ndarray, comb: np.ndarray,
         return idx, counts
     keep = idx[:max_types]
     s = comb[keep]
-    r = s / s.sum() * amount
+    total = s.sum()
+    if total > 0:
+        r = s / total * amount
+    else:
+        # All kept scores zero (e.g. W=1 with a flat archive): the
+        # score-proportional split is 0/0, so allocate equally instead.
+        r = np.full(len(keep), amount / len(keep))
     counts = np.ceil(r / caps[keep]).astype(np.int64)
     return keep, counts
 
@@ -85,15 +156,29 @@ class RecommendationEngine:
     required for archives of tens of thousands of candidates), or ``"auto"``
     (default: tiled from ``pool_lib.POOL_TILED_AUTO_K`` candidates up).
     Both produce bit-identical pools.
+
+    ``score_impl`` selects the batched scoring stage the same way:
+    ``"dense"`` re-evaluates the full Eq. 3 chain over the (K, T) archive
+    slice every batch; ``"tiled"`` streams the per-request O(K) remainder
+    (``repro.kernels.score_fuse``) over per-candidate statistics that are
+    computed once — and cached on the staged archive when one is supplied —
+    turning the batched scoring stage from O(K*T + B*K) per batch into
+    O(B*K) amortized.  ``"auto"`` switches at
+    ``scoring.SCORE_TILED_AUTO_K`` candidates.
     """
 
     def __init__(self, *, use_vectorized_pool: bool = True,
-                 pool_impl: str = "auto"):
+                 pool_impl: str = "auto", score_impl: str = "auto"):
         if pool_impl not in pool_lib.POOL_IMPLS:
             raise ValueError(
                 f"pool_impl must be one of {pool_lib.POOL_IMPLS}, got {pool_impl!r}")
+        if score_impl not in scoring.SCORE_IMPLS:
+            raise ValueError(
+                f"score_impl must be one of {scoring.SCORE_IMPLS}, "
+                f"got {score_impl!r}")
         self._use_vectorized = use_vectorized_pool
         self.pool_impl = pool_impl
+        self.score_impl = score_impl
 
     def score(self, cands: CandidateSet, req: ResourceRequest):
         """Return (combined S, availability AS, cost CS) for all candidates."""
@@ -150,7 +235,8 @@ class RecommendationEngine:
         of compiled (B, K) shapes; padded rows are computed-and-discarded.
         ``archive`` is an optional :class:`repro.serve.DeviceArchive` whose
         device-resident arrays skip the per-call host->device transfer of
-        the candidate set.
+        the candidate set — and, under the tiled scoring stage, whose cached
+        per-candidate statistics skip the O(K*T) pass entirely.
         """
         requests = list(requests)
         if not requests:
@@ -169,10 +255,17 @@ class RecommendationEngine:
                 jnp.asarray(cands.vcpus, jnp.float32),
                 jnp.asarray(cands.memory_gb, jnp.float32))
         impl = pool_lib.resolve_pool_impl(self.pool_impl, len(cands))
+        s_impl = scoring.resolve_score_impl(self.score_impl, len(cands))
+        if s_impl == "tiled":
+            stats = archive.score_stats() if archive is not None else None
+            uniq_masks, uniq_inv = _dedup_masks(batch.masks)
+        else:
+            stats = uniq_masks = uniq_inv = None
         comb, avail, cost, order, counts, k_stop, _ = jax.device_get(
             _fused_recommend_batch(
                 t3, prices, vcpus, memory_gb, batch.masks, batch.use_cpus,
-                batch.weights, batch.lams, batch.amounts, pool_impl=impl))
+                batch.weights, batch.lams, batch.amounts, stats, uniq_masks,
+                uniq_inv, pool_impl=impl, score_impl=s_impl))
         solve_time = time.perf_counter() - t0
 
         recs = []

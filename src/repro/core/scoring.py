@@ -26,6 +26,24 @@ import numpy as np
 DEFAULT_LAMBDA = 0.1
 DEFAULT_WEIGHT = 0.5
 
+#: "auto" switches the batched engine from the vmapped dense scoring stage to
+#: the streaming masked kernel (``repro.kernels.score_fuse``) at this many
+#: candidates: the tiled path pays a per-request dispatch of tile scans, which
+#: only amortizes once the archive-cached O(K*T) statistics pass it skips is
+#: large (see benchmarks/scoring_scaling.py).
+SCORE_TILED_AUTO_K = 4096
+
+SCORE_IMPLS = ("dense", "tiled", "auto")
+
+
+def resolve_score_impl(impl: str, k: int) -> str:
+    """Resolve the ``score_impl`` switch for a K-candidate scoring stage."""
+    if impl not in SCORE_IMPLS:
+        raise ValueError(f"score_impl must be one of {SCORE_IMPLS}, got {impl!r}")
+    if impl == "auto":
+        return "tiled" if k >= SCORE_TILED_AUTO_K else "dense"
+    return impl
+
 
 class AvailabilityComponents(NamedTuple):
     """Intermediate quantities of Eq. 3 (useful for tests / benchmarks)."""
@@ -65,8 +83,41 @@ def _regression_slopes(t3: jax.Array) -> jax.Array:
     t = jnp.arange(T, dtype=t3.dtype)
     t_c = t - jnp.mean(t)
     denom = jnp.sum(t_c * t_c)
+    # T == 1: the centered grid is identically zero, so both the numerator
+    # and sum(t_c^2) vanish — the slope is 0 by convention, not 0/0 = NaN.
+    denom = jnp.where(denom > 0, denom, 1.0)
     y_c = t3 - jnp.mean(t3, axis=-1, keepdims=True)
     return (y_c @ t_c) / denom
+
+
+class CandidateStats(NamedTuple):
+    """Request-independent per-candidate raw statistics of the T3 archive.
+
+    These are the O(K*T) reductions of Eq. 3 before any per-request MinMax
+    normalisation: they depend only on the archive slice, so the serve layer
+    computes them once per staged archive (``DeviceArchive.score_stats``) and
+    every batch against that archive reuses them.  The per-request remainder
+    of Eq. 2-4 — masked MinMax, masked C_min, the combine — is O(K) and lives
+    in ``repro.kernels.score_fuse``.
+    """
+
+    area: jax.Array   # (K,) raw trapezoid area under the T3 curve
+    slope: jax.Array  # (K,) raw least-squares slope m_i
+    std: jax.Array    # (K,) raw standard deviation sigma_i
+
+
+@jax.jit
+def candidate_stats(t3: jax.Array) -> CandidateStats:
+    """The O(K*T) pass of Eq. 3: raw area / slope / std per candidate.
+
+    Float op order is shared with :func:`availability_scores` (both call this
+    helper's exact expressions), which is what lets the streaming kernel's
+    outputs agree with the gathered oracle on valid lanes.
+    """
+    t3 = jnp.asarray(t3, jnp.float32)
+    # Trapezoid area over a uniform grid == mean of interior-weighted samples.
+    w = jnp.ones(t3.shape[-1], jnp.float32).at[0].set(0.5).at[-1].set(0.5)
+    return CandidateStats(t3 @ w, _regression_slopes(t3), jnp.std(t3, axis=-1))
 
 
 @functools.partial(jax.jit, static_argnames=("return_components",))
@@ -82,13 +133,10 @@ def availability_scores(
     - m_i    : first-order linear-regression slope, MinMax across candidates.
     - sigma_i: standard deviation of T3_i, MinMax across candidates.
     """
-    t3 = jnp.asarray(t3, jnp.float32)
-    # Trapezoid area over a uniform grid == mean of interior-weighted samples.
-    w = jnp.ones(t3.shape[-1], jnp.float32).at[0].set(0.5).at[-1].set(0.5)
-    area = t3 @ w  # (K,)
-    a3 = _safe_minmax(area)
-    slope = _safe_minmax(_regression_slopes(t3))
-    sigma = _safe_minmax(jnp.std(t3, axis=-1))
+    stats = candidate_stats(t3)
+    a3 = _safe_minmax(stats.area)
+    slope = _safe_minmax(stats.slope)
+    sigma = _safe_minmax(stats.std)
     score = 100.0 * a3 * (1.0 + lam * (slope - sigma))
     score = jnp.clip(score, 0.0, None)
     if return_components:
@@ -138,11 +186,10 @@ def availability_scores_masked(
     t3: jax.Array, lam: float | jax.Array, mask: jax.Array
 ) -> jax.Array:
     """Eq. 3 with MinMax normalisations restricted to ``mask`` lanes."""
-    t3 = jnp.asarray(t3, jnp.float32)
-    w = jnp.ones(t3.shape[-1], jnp.float32).at[0].set(0.5).at[-1].set(0.5)
-    a3 = _masked_minmax(t3 @ w, mask)
-    slope = _masked_minmax(_regression_slopes(t3), mask)
-    sigma = _masked_minmax(jnp.std(t3, axis=-1), mask)
+    stats = candidate_stats(t3)
+    a3 = _masked_minmax(stats.area, mask)
+    slope = _masked_minmax(stats.slope, mask)
+    sigma = _masked_minmax(stats.std, mask)
     return jnp.clip(100.0 * a3 * (1.0 + lam * (slope - sigma)), 0.0, None)
 
 
@@ -172,7 +219,8 @@ def availability_scores_ref(t3: np.ndarray, lam: float = DEFAULT_LAMBDA) -> np.n
     a3 = mm(area)
     T = t3.shape[-1]
     t = np.arange(T) - (T - 1) / 2.0
-    slope = mm((t3 - t3.mean(-1, keepdims=True)) @ t / (t @ t))
+    denom = t @ t if T > 1 else 1.0    # T == 1: slope is 0, not 0/0
+    slope = mm((t3 - t3.mean(-1, keepdims=True)) @ t / denom)
     sigma = mm(t3.std(-1))
     return np.maximum(100.0 * a3 * (1.0 + lam * (slope - sigma)), 0.0)
 

@@ -8,6 +8,11 @@
                     memory vs the dense K x K matrix; SMEM scratch carry)
                     with a ``lax.scan`` CPU/GPU fallback — the production
                     large-K path behind ``core.pool``'s ``pool_impl``
+- score_fuse      : streaming masked Eq. 2-4 scoring (per-request masked
+                    MinMax / C_min scalars in SMEM carry, tiled row
+                    emission) over archive-cached per-candidate statistics
+                    — the large-K scoring stage behind the engine's
+                    ``score_impl``, with a ``lax.scan`` CPU/GPU fallback
 
 Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py
 (pool_scan's oracle is the dense scan + greedy_pool loop in core/pool.py,

@@ -14,6 +14,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from ..core import scoring
 from ..core.types import CandidateSet
 
 
@@ -47,6 +48,22 @@ class DeviceArchive:
             t3=put(cands.t3), prices=put(cands.prices),
             vcpus=put(cands.vcpus), memory_gb=put(cands.memory_gb),
         )
+
+    def score_stats(self) -> scoring.CandidateStats:
+        """Request-independent scoring statistics, computed once per archive.
+
+        The O(K*T) raw area / slope / std reductions of Eq. 3 depend only on
+        the T3 slice, so they are evaluated lazily on first use and memoised
+        on the archive — an entry in the content-keyed :class:`ArchiveCache`
+        therefore pays the pass once, and every later batch against the same
+        fingerprint skips it (the streaming scoring kernel consumes these
+        directly; see ``repro.kernels.score_fuse``).
+        """
+        stats = self.__dict__.get("_score_stats")
+        if stats is None:
+            stats = scoring.candidate_stats(self.t3)
+            object.__setattr__(self, "_score_stats", stats)
+        return stats
 
     @property
     def nbytes(self) -> int:

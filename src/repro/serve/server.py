@@ -66,15 +66,23 @@ class BatchServer:
         Algorithm 1 scan selection ("dense" / "tiled" / "auto") for the
         default-constructed engine; ignored when ``engine`` is provided
         (configure that engine directly instead).
+    score_impl : str
+        Scoring-stage selection ("dense" / "tiled" / "auto") for the
+        default-constructed engine, same contract as ``pool_impl``.  The
+        tiled stage reuses each cached archive's per-candidate statistics
+        (``DeviceArchive.score_stats``), so repeated batches against a hot
+        archive skip the O(K*T) Eq. 3 reductions entirely.
     """
 
     def __init__(self, engine: RecommendationEngine | None = None, *,
                  bucket_sizes: tuple[int, ...] = DEFAULT_BUCKETS,
-                 cache_capacity: int = 4, pool_impl: str = "auto"):
+                 cache_capacity: int = 4, pool_impl: str = "auto",
+                 score_impl: str = "auto"):
         if not bucket_sizes or any(b < 1 for b in bucket_sizes):
             raise ValueError("bucket_sizes must be positive")
         self.engine = (engine if engine is not None
-                       else RecommendationEngine(pool_impl=pool_impl))
+                       else RecommendationEngine(pool_impl=pool_impl,
+                                                 score_impl=score_impl))
         self.bucket_sizes = tuple(sorted(set(bucket_sizes)))
         self.cache = ArchiveCache(capacity=cache_capacity)
         self.stats = ServeStats()

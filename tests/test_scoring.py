@@ -89,3 +89,73 @@ def test_lambda_bounds_adjustment():
     base = np.asarray(100.0 * comp.a3)
     adj = np.asarray(comp.score)
     assert (np.abs(adj - base) <= 0.1 * base + 1e-4).all()
+
+
+# ---------------------------------------------------------------------------
+# Streaming masked-scoring kernel: adversarial parity with the gathered
+# per-request oracle (see repro.kernels.score_fuse; helpers shared with
+# test_score_fuse.py via _score_helpers).
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.kernels import score_fuse as sf  # noqa: E402
+
+from _score_helpers import (KW as _KW, TILE as _TILE,  # noqa: E402
+                            assert_matches_oracle, gathered_oracle, instance,
+                            kernel_args)
+
+
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), mask_seed=st.integers(0, 2 ** 31),
+       n_valid=st.integers(1, _KW), dup_rows=st.integers(0, _KW),
+       const_rows=st.integers(0, _KW), use_cpus=st.booleans(),
+       req=st.integers(32, 6000).map(lambda x: x / 4),
+       lam=st.integers(0, 50).map(lambda x: x / 100),
+       wt=st.integers(0, 100).map(lambda x: x / 100))
+def test_masked_tiled_matches_gathered_oracle(seed, mask_seed, n_valid,
+                                              dup_rows, const_rows, use_cpus,
+                                              req, lam, wt):
+    # req on quarter-integers: floats sitting exactly on a ceil() boundary
+    # can legitimately round differently between float64 and float32 paths.
+    # Duplicate and constant T3 rows produce duplicate / degenerate stats
+    # (MinMax ties and the rng == 0 branch); n_valid == 1 exercises the
+    # all-stats-degenerate single-lane case.
+    t3, prices, vcpus, mems = instance(seed, dup_rows=dup_rows,
+                                       const_rows=const_rows)
+    rng = np.random.default_rng(mask_seed)
+    mask = np.zeros(_KW, bool)
+    mask[rng.choice(_KW, size=n_valid, replace=False)] = True
+    outs = sf.score_fuse(*kernel_args(t3, prices, vcpus, mems, mask,
+                                      use_cpus, req, lam, wt),
+                         tile=_TILE, backend="lax")
+    assert_matches_oracle(outs, t3, prices, vcpus, mems, mask, use_cpus,
+                          req, lam, wt)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), mask_seed=st.integers(0, 2 ** 31),
+       n_valid=st.integers(1, _KW),
+       req=st.integers(32, 6000).map(lambda x: x / 4))
+def test_tiled_pools_bit_identical_to_oracle(seed, mask_seed, n_valid, req):
+    """Pools formed from the streamed combined scores must match the
+    gathered-subset Algorithm 1 loop oracle exactly."""
+    from repro.core import pool as pool_lib
+    t3, prices, vcpus, mems = instance(seed)
+    rng = np.random.default_rng(mask_seed)
+    mask = np.zeros(_KW, bool)
+    mask[rng.choice(_KW, size=n_valid, replace=False)] = True
+    comb, _, _ = sf.score_fuse(*kernel_args(t3, prices, vcpus, mems, mask,
+                                            True, req, 0.1, 0.5),
+                               tile=_TILE, backend="lax")
+    order, counts, _, _ = jax.device_get(pool_lib.greedy_pool_masked(
+        jnp.asarray(comb), jnp.asarray(vcpus, jnp.float32),
+        jnp.float32(req), jnp.asarray(mask), impl="tiled", tile=_TILE))
+    sel = counts > 0
+    valid = np.flatnonzero(mask)
+    comb_g, _, _ = gathered_oracle(t3, prices, vcpus, mems, mask, True,
+                                   req, 0.1, 0.5)
+    oracle = pool_lib.greedy_pool(comb_g, vcpus[valid], req)
+    assert list(valid[oracle.indices]) == list(np.asarray(order)[sel])
+    assert list(oracle.counts) == list(np.asarray(counts)[sel])
