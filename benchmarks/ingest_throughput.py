@@ -1,0 +1,263 @@
+"""Live-ingestion throughput: O(K) streamed ticks vs stage-from-scratch.
+
+Measures what one collector tick costs the serving layer at the paper's
+scoring window (T = 1008; see ``configs/spotvista.py``) across archive
+widths K:
+
+- ``tick``  — the streaming path (``repro.stream.RollingDeviceArchive``):
+  host->device of one (K,) column, donated in-place ring-slot write, and the
+  O(K) rank-1 statistics update (``repro.kernels.stats_update``) — the
+  archive is serve-ready (fresh ``score_stats``) when the tick returns;
+- ``stage`` — the snapshot path the streaming subsystem replaces: re-stage
+  the whole (K, T) window as a fresh ``DeviceArchive`` and recompute
+  ``candidate_stats`` (content hashing excluded — being generous to the
+  baseline).
+
+plus the acceptance pair: per-tick ingest at (K=32768, T=1008) must clear a
+>= 10x speedup over stage-from-scratch on CPU.  Every executed K
+cross-checks the incrementally-maintained statistics against a fresh
+``candidate_stats`` of the materialized window (float32-ulp budget) and the
+resulting ``recommend_batch`` pools bit-for-bit against a cold re-stage.
+
+Modes::
+
+    python -m benchmarks.ingest_throughput                 # full sweep,
+        # writes the committed benchmarks/BENCH_ingest.json artifact
+    python -m benchmarks.ingest_throughput --smoke         # small-K sweep
+    python -m benchmarks.ingest_throughput --smoke --check benchmarks/BENCH_ingest.json
+        # CI lane: fail on parity divergence, a broken admission drain, or
+        # >20% regression of the tick-over-stage speedup vs the artifact
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.spotvista import CONFIG
+from repro.core import RecommendationEngine, ResourceRequest, scoring
+from repro.core.types import CandidateSet
+from repro.serve import BatchServer, DeviceArchive
+from repro.stream import AdmissionQueue, LiveIngestor, RollingDeviceArchive
+
+from ._world import row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_ingest.json"
+
+T_WINDOW = int(CONFIG.window_days * 24 * 60 / CONFIG.collect_period_min)
+T_SMOKE = 168
+K_SWEEP = (1024, 8192, 32768)
+K_SMOKE = (256, 1024, 4096)
+ACCEPT_PAIR = (32768, T_WINDOW)
+SMOKE_PAIR = (4096, T_SMOKE)
+LOOP_SECONDS = 0.6
+REGRESSION_TOLERANCE = 0.20
+# The committed tick/stage speedup mostly measures how slow the runner's
+# host->device path and (K, T) reductions are; derate the reference so the
+# gate trips on a reintroduced O(K*T) per-tick cost, not on a fast runner.
+CHECK_SPEEDUP_CAP = 10.0
+
+STAT_RTOL = 1e-5
+STAT_ATOL = 1e-4
+
+
+def _bench(fn, *, min_reps: int = 2, budget: float = LOOP_SECONDS) -> float:
+    fn()                                   # warm (compile + caches)
+    best = np.inf
+    t_start = time.perf_counter()
+    reps = 0
+    while reps < min_reps or time.perf_counter() - t_start < budget:
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        reps += 1
+        if reps >= 200:
+            break
+    return best
+
+
+def _candidates(K: int, T: int, seed: int = 0) -> CandidateSet:
+    rng = np.random.default_rng(seed)
+    fams = rng.choice(["m5", "c5", "r5", "t3"], K)
+    return CandidateSet(
+        names=np.array([f"{fams[i]}.x{i}" for i in range(K)]),
+        regions=rng.choice(["us-east-1", "eu-west-1"], K),
+        azs=rng.choice(["a", "b", "c"], K),
+        families=fams,
+        categories=rng.choice(["general", "compute", "memory"], K),
+        vcpus=rng.choice([2, 4, 8, 16, 32, 64, 96], K).astype(np.float64),
+        memory_gb=rng.choice([4, 8, 16, 64, 128, 384], K).astype(np.float64),
+        prices=rng.uniform(0.01, 5.0, K),
+        t3=rng.uniform(0.0, 50.0, (K, T)),
+    )
+
+
+def _check_parity(arch: RollingDeviceArchive, reqs) -> bool:
+    """Streamed stats ulp-close + pools bit-identical to a cold re-stage."""
+    window = arch.materialize()
+    ref = scoring.candidate_stats(window)
+    for a, b in zip(arch.score_stats(), ref):
+        if not np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=STAT_RTOL, atol=STAT_ATOL):
+            return False
+    engine = RecommendationEngine(score_impl="tiled", pool_impl="auto")
+    live = engine.recommend_batch(arch.host, reqs, archive=arch)
+    cold_set = CandidateSet(
+        names=arch.host.names, regions=arch.host.regions, azs=arch.host.azs,
+        families=arch.host.families, categories=arch.host.categories,
+        vcpus=arch.host.vcpus, memory_gb=arch.host.memory_gb,
+        prices=arch.host.prices, t3=window.astype(np.float64))
+    cold = engine.recommend_batch(cold_set, reqs,
+                                  archive=DeviceArchive.stage(cold_set))
+    for a, b in zip(live, cold):
+        if (list(a.names) != list(b.names)
+                or not np.array_equal(a.counts, b.counts)
+                or a.hourly_cost != b.hourly_cost):
+            return False
+    return True
+
+
+def _measure_pair(K: int, T: int) -> dict:
+    cands = _candidates(K, T)
+    rng = np.random.default_rng(1)
+    arch = RollingDeviceArchive(cands, name=f"bench{K}x{T}")
+    cols = [rng.uniform(0.0, 50.0, K) for _ in range(8)]
+    i = [0]
+
+    def tick():
+        arch.append(cols[i[0] % len(cols)])
+        i[0] += 1
+        jax.block_until_ready(arch.score_stats())
+
+    def stage():
+        staged = DeviceArchive.stage(cands, key="bench")  # hash excluded
+        jax.block_until_ready(staged.score_stats())
+
+    t_tick = _bench(tick)
+    t_stage = _bench(stage)
+    reqs = [ResourceRequest(cpus=256.0),
+            ResourceRequest(memory_gb=512.0, weight=0.7)]
+    return {"K": K, "T": T, "parity": _check_parity(arch, reqs),
+            "tick_us": t_tick * 1e6, "stage_us": t_stage * 1e6,
+            "ticks_per_s": 1.0 / t_tick, "speedup": t_stage / t_tick}
+
+
+def _admission_smoke() -> bool:
+    """End-to-end drain through the admission front on a live archive."""
+    cands = _candidates(512, 64, seed=9)
+    arch = RollingDeviceArchive(cands, name="adm")
+    server = BatchServer(RecommendationEngine(score_impl="tiled"),
+                         bucket_sizes=(1, 4, 8))
+    q = AdmissionQueue(server, arch, max_wait_s=0.0)
+    tickets = [q.submit(ResourceRequest(cpus=float(32 * (i + 1))))
+               for i in range(5)]
+    arch.append(np.random.default_rng(3).uniform(0, 50, 512))
+    q.drain(force=True)
+    return (all(t.done for t in tickets)
+            and all(t.result().hourly_cost > 0 for t in tickets)
+            and all(t.result().diagnostics["archive_version"] == 1
+                    for t in tickets))
+
+
+def _rows(pairs) -> list[str]:
+    return [row(f"ingest/K{r['K']}_T{r['T']}", r["tick_us"],
+                ticks_per_s=round(r["ticks_per_s"], 1),
+                stage_us=round(r["stage_us"], 1),
+                speedup=round(r["speedup"], 2), parity=r["parity"])
+            for r in pairs]
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size sweep."""
+    pairs = [_measure_pair(K, T_SMOKE) for K in K_SMOKE]
+    if not all(r["parity"] for r in pairs):
+        raise AssertionError("streamed stats/pools diverged from cold restage")
+    if not _admission_smoke():
+        raise AssertionError("admission drain failed")
+    return _rows(pairs)
+
+
+def _full() -> dict:
+    pairs = [_measure_pair(K, T_WINDOW) for K in K_SWEEP]
+    smoke = _measure_pair(*SMOKE_PAIR)
+    accept = next(r for r in pairs if r["K"] == ACCEPT_PAIR[0])
+    return {
+        "meta": {"backend": jax.default_backend(), "T_window": T_WINDOW,
+                 "T_smoke": T_SMOKE},
+        "sweep": pairs,
+        "accept": {"K": accept["K"], "T": accept["T"],
+                   "tick_us": accept["tick_us"],
+                   "stage_us": accept["stage_us"],
+                   "speedup": accept["speedup"],
+                   "ge_10x": accept["speedup"] >= 10.0},
+        "smoke": {"K": smoke["K"], "T": smoke["T"],
+                  "speedup": smoke["speedup"]},
+    }
+
+
+def _check(artifact: Path) -> int:
+    committed = json.loads(artifact.read_text())
+    for K in K_SMOKE:
+        cands = _candidates(K, T_SMOKE)
+        arch = RollingDeviceArchive(cands)
+        rng = np.random.default_rng(2)
+        for _ in range(5):
+            arch.append(rng.uniform(0.0, 50.0, K))
+        if not _check_parity(arch, [ResourceRequest(cpus=128.0),
+                                    ResourceRequest(memory_gb=64.0)]):
+            print(f"# FAIL: streamed stats/pools diverged at K={K}",
+                  file=sys.stderr)
+            return 1
+    if not _admission_smoke():
+        print("# FAIL: admission drain failed", file=sys.stderr)
+        return 1
+    smoke = _measure_pair(*SMOKE_PAIR)
+    ref = min(committed["smoke"]["speedup"], CHECK_SPEEDUP_CAP)
+    floor = (1.0 - REGRESSION_TOLERANCE) * ref
+    print(row(f"ingest/check_K{smoke['K']}_T{smoke['T']}", smoke["tick_us"],
+              speedup=round(smoke["speedup"], 2), committed=round(ref, 2),
+              floor=round(floor, 2)))
+    if smoke["speedup"] < floor:
+        print(f"# FAIL: ingest speedup {smoke['speedup']:.2f}x regressed "
+              f">20% vs committed {ref:.2f}x", file=sys.stderr)
+        return 1
+    print("# ingest check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-K sweep only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_ingest.json "
+                         "and exit non-zero on divergence/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full sweep")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    print("name,us_per_call,derived")
+    if args.smoke:
+        for line in run():
+            print(line)
+        return
+    payload = _full()
+    for line in _rows(payload["sweep"]):
+        print(line)
+    if not all(r["parity"] for r in payload["sweep"]):
+        raise SystemExit("# FAIL: streamed stats/pools diverged")
+    args.out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     "serve_throughput",
     "pool_scan_scaling",
     "scoring_scaling",
+    "ingest_throughput",
     "kernels_micro",
     "roofline",
 ]

@@ -30,6 +30,12 @@ class CollectorConfig:
     step: int = 5
     mode: str = "usqs"            # "usqs" | "tstp" | "full"
     tstp_early_stop: int = 4
+    #: host-side T3 ring capacity (columns).  When set, the collector keeps
+    #: the last N ticks in a preallocated (K, N) ndarray so a bounded-window
+    #: ``to_candidate_set(window=...)`` materializes in O(K*window) instead
+    #: of rebuilding the full python-list matrix, and ``column(i)`` (the
+    #: live-ingestion feed) is an O(K) slice.  None disables the ring.
+    ring_capacity: int | None = None
 
 
 class DataCollector:
@@ -50,6 +56,12 @@ class DataCollector:
         self.t3_archive: dict[tuple, list[int]] = {t: [] for t in self.targets}
         self.t2_archive: dict[tuple, list[int]] = {t: [] for t in self.targets}
         self._tick = 0
+        cap = self.cfg.ring_capacity
+        # preallocated (K, cap) host ring of the last `cap` T3 columns
+        self._ring = (np.zeros((len(self.targets), cap), np.float64)
+                      if cap else None)
+        self._ring_len = 0
+        self._static_cols = None     # cached catalog columns (static per run)
 
     # -- one collection cycle ------------------------------------------------
 
@@ -83,6 +95,11 @@ class DataCollector:
                         t2 = n
                 self.t3_archive[tgt].append(t3)
                 self.t2_archive[tgt].append(t2)
+        if self._ring is not None:
+            cap = self._ring.shape[1]
+            self._ring[:, self._tick % cap] = [self.t3_archive[t][-1]
+                                               for t in self.targets]
+            self._ring_len = min(self._ring_len + 1, cap)
         self._tick += 1
 
     def run(self, cycles: int) -> None:
@@ -92,24 +109,65 @@ class DataCollector:
 
     # -- archive -> engine candidate set --------------------------------------
 
+    @property
+    def ticks(self) -> int:
+        """Completed collection cycles (== columns in the full archive)."""
+        return self._tick
+
+    def column(self, i: int) -> np.ndarray:
+        """The (K,) T3 column of tick ``i`` — the live-ingestion feed.
+
+        O(K) from the host ring when tick ``i`` is still inside it,
+        otherwise assembled from the full per-target lists.
+        """
+        if not -self._tick <= i < self._tick:
+            raise IndexError(f"tick {i} not collected yet (have {self._tick})")
+        i %= self._tick
+        if self._ring is not None and i >= self._tick - self._ring_len:
+            return self._ring[:, i % self._ring.shape[1]].copy()
+        return np.array([self.t3_archive[t][i] for t in self.targets],
+                        np.float64)
+
+    def _catalog_columns(self):
+        if self._static_cols is None:
+            cat = self.market.catalog
+            names, regions, azs, fams, cats, vcpus, mems, prices = \
+                [], [], [], [], [], [], [], []
+            for ty, rg, az in self.targets:
+                it = cat.get(ty)
+                names.append(ty); regions.append(rg); azs.append(az)
+                fams.append(it.family); cats.append(it.category)
+                vcpus.append(it.vcpus); mems.append(it.memory_gb)
+                prices.append(cat.spot_price(ty, rg))
+            self._static_cols = (
+                np.array(names), np.array(regions), np.array(azs),
+                np.array(fams), np.array(cats),
+                np.array(vcpus, np.float64), np.array(mems, np.float64),
+                np.array(prices, np.float64))
+        return self._static_cols
+
     def to_candidate_set(self, window: int | None = None) -> CandidateSet:
-        cat = self.market.catalog
-        names, regions, azs, fams, cats, vcpus, mems, prices, rows = \
-            [], [], [], [], [], [], [], [], []
-        for tgt in self.targets:
-            ty, rg, az = tgt
-            it = cat.get(ty)
-            series = np.asarray(self.t3_archive[tgt], np.float64)
-            if window is not None:
-                series = series[-window:]
-            names.append(ty); regions.append(rg); azs.append(az)
-            fams.append(it.family); cats.append(it.category)
-            vcpus.append(it.vcpus); mems.append(it.memory_gb)
-            prices.append(cat.spot_price(ty, rg))
-            rows.append(series)
+        """Assemble the (K, T) scoring-window candidate set.
+
+        With a host ring configured (``CollectorConfig.ring_capacity``) and
+        a ``window`` the ring still covers, the T3 matrix is two ndarray
+        slices — O(K*window) per tick instead of a python-list rebuild of
+        the entire history.  Output is identical either way (the regression
+        test pins this).
+        """
+        names, regions, azs, fams, cats, vcpus, mems, prices = \
+            self._catalog_columns()
+        # window=0 keeps the historical `series[-0:]` (full-history) reading
+        w_eff = self._tick if not window else min(window, self._tick)
+        if self._ring is not None and 0 < w_eff <= self._ring_len:
+            cap = self._ring.shape[1]
+            idx = (np.arange(self._tick - w_eff, self._tick)) % cap
+            t3 = self._ring[:, idx]
+        else:
+            t3 = np.stack([np.asarray(self.t3_archive[t], np.float64)[
+                self._tick - w_eff:] for t in self.targets])
         return CandidateSet(
-            names=np.array(names), regions=np.array(regions), azs=np.array(azs),
-            families=np.array(fams), categories=np.array(cats),
-            vcpus=np.array(vcpus, np.float64), memory_gb=np.array(mems, np.float64),
-            prices=np.array(prices, np.float64), t3=np.stack(rows),
+            names=names, regions=regions, azs=azs, families=fams,
+            categories=cats, vcpus=vcpus, memory_gb=mems, prices=prices,
+            t3=t3,
         )

@@ -243,9 +243,29 @@ class RecommendationEngine:
             return []
         t0 = time.perf_counter()
         batch = RequestBatch.from_requests(cands, requests, pad_to=pad_to)
+        impl = pool_lib.resolve_pool_impl(self.pool_impl, len(cands))
+        s_impl = scoring.resolve_score_impl(self.score_impl, len(cands))
+        if (s_impl == "dense" and archive is not None
+                and not getattr(archive, "dense_capable", True)):
+            # Version-pinned snapshots carry statistics but no window matrix
+            # (repro.stream.ArchiveSnapshot) — they can only feed the tiled
+            # stage, whatever the auto threshold says at this K.
+            s_impl = "tiled"
+        if s_impl == "tiled":
+            stats = archive.score_stats() if archive is not None else None
+            uniq_masks, uniq_inv = _dedup_masks(batch.masks)
+        else:
+            stats = uniq_masks = uniq_inv = None
         if archive is not None:
-            t3, prices, vcpus, memory_gb = (
-                archive.t3, archive.prices, archive.vcpus, archive.memory_gb)
+            # With archive-cached stats the fused computation never reads t3
+            # (XLA drops the operand), so ask the archive for its cheapest
+            # stand-in: rolling/streaming archives hand back an O(K) token
+            # instead of materializing their logical window (an O(K*T)
+            # gather), which is what keeps per-tick serving O(K).
+            t3 = (archive.t3_operand if stats is not None
+                  else archive.t3)
+            prices, vcpus, memory_gb = (
+                archive.prices, archive.vcpus, archive.memory_gb)
         else:
             # Same float32 staging as DeviceArchive so both entry points hit
             # one compiled signature (the kernels cast to float32 regardless).
@@ -254,13 +274,6 @@ class RecommendationEngine:
                 jnp.asarray(cands.prices, jnp.float32),
                 jnp.asarray(cands.vcpus, jnp.float32),
                 jnp.asarray(cands.memory_gb, jnp.float32))
-        impl = pool_lib.resolve_pool_impl(self.pool_impl, len(cands))
-        s_impl = scoring.resolve_score_impl(self.score_impl, len(cands))
-        if s_impl == "tiled":
-            stats = archive.score_stats() if archive is not None else None
-            uniq_masks, uniq_inv = _dedup_masks(batch.masks)
-        else:
-            stats = uniq_masks = uniq_inv = None
         comb, avail, cost, order, counts, k_stop, _ = jax.device_get(
             _fused_recommend_batch(
                 t3, prices, vcpus, memory_gb, batch.masks, batch.use_cpus,

@@ -120,6 +120,54 @@ def candidate_stats(t3: jax.Array) -> CandidateStats:
     return CandidateStats(t3 @ w, _regression_slopes(t3), jnp.std(t3, axis=-1))
 
 
+def stats_from_moments(s0: jax.Array, s1: jax.Array, q: jax.Array,
+                       y_first: jax.Array, y_last: jax.Array,
+                       length: jax.Array,
+                       ref: jax.Array | float = 0.0) -> CandidateStats:
+    """:class:`CandidateStats` from streaming power/time moments of a window.
+
+    ``s0 = sum(y)``, ``s1 = sum(i * y)`` (``i`` the position inside the
+    window, oldest first), ``q = sum((y - ref)^2)`` over the current
+    ``length``-sample window whose first/last columns are ``y_first`` /
+    ``y_last``.  These three moments are exactly what a one-column
+    append/evict can rank-1-update in O(K) (``repro.kernels.stats_update``);
+    this helper is the O(K) algebraic tail turning them back into the Eq. 3
+    statistics:
+
+    - area : trapezoid = ``s0 - (y_first + y_last) / 2`` (uniform grid), with
+      the T == 1 convention of :func:`candidate_stats` (half-weighted single
+      sample);
+    - slope: ``sum(t_c * y) / sum(t_c^2)`` where the numerator is
+      ``s1 - mean(t) * s0`` and the denominator has the closed form
+      ``T (T^2 - 1) / 12`` (0-guarded like :func:`_regression_slopes`);
+    - std  : ``sqrt(q / T - (mean - ref)^2)`` (clamped at 0 — cancellation
+      can land a float32 ulp below).
+
+    ``ref`` is a per-candidate *fixed* reference point the second moment is
+    centered on (the streaming kernel freezes the seed window's mean).  The
+    naive ``ref = 0`` power sum loses the variance to cancellation whenever
+    ``std << mean`` — e.g. a near-flat T3 row, where a raw ``sum(y^2)``
+    formulation can turn an exactly-zero variance into O(1e-2) noise that a
+    per-request MinMax then amplifies across the candidate set.  Centering
+    makes both subtraction operands O(var), so the flat row stays exactly 0
+    and the general case keeps float32-ulp accuracy (drift of the live mean
+    away from ``ref`` degrades this gracefully, quadratically in the drift).
+
+    Purely elementwise over the candidate axis, so it is the same code inside
+    the Pallas update kernel and the vectorized fallback.  Agreement with
+    :func:`candidate_stats` on the materialized window is at float32-ulp
+    level, not bitwise: the one-shot reductions use a different summation
+    order by construction.
+    """
+    T = jnp.asarray(length, jnp.float32)
+    area = jnp.where(T > 1, s0 - 0.5 * (y_first + y_last), 0.5 * s0)
+    denom = T * (T * T - 1.0) / 12.0
+    slope = (s1 - (T - 1.0) / 2.0 * s0) / jnp.where(denom > 0, denom, 1.0)
+    d = s0 / T - ref
+    std = jnp.sqrt(jnp.maximum(q / T - d * d, 0.0))
+    return CandidateStats(area, slope, std)
+
+
 @functools.partial(jax.jit, static_argnames=("return_components",))
 def availability_scores(
     t3: jax.Array,

@@ -13,6 +13,11 @@
                     emission) over archive-cached per-candidate statistics
                     — the large-K scoring stage behind the engine's
                     ``score_impl``, with a ``lax.scan`` CPU/GPU fallback
+- stats_update    : O(K) rank-1 update of the Eq. 3 candidate statistics
+                    when the live collector appends/evicts one T3 column
+                    (compensated float32 moment pairs, elementwise tiles)
+                    — the per-tick path behind ``repro.stream``'s rolling
+                    archives, with a vectorized CPU/GPU fallback
 
 Each has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py
 (pool_scan's oracle is the dense scan + greedy_pool loop in core/pool.py,

@@ -1,0 +1,252 @@
+"""Incremental candidate-statistics kernel: O(K) rank-1 update of the Eq. 3
+reductions when the live collector appends (and possibly evicts) one T3 column.
+
+``core.scoring.candidate_stats`` is the O(K*T) pass the serve layer caches per
+staged archive.  Under live ingestion the archive changes by exactly one
+column per collector tick, so recomputing the full reductions — let alone
+re-staging the whole (K, T) slice — is pure waste: every statistic of Eq. 3
+is a function of three streaming moments per candidate,
+
+    S0 = sum(y_i),   S1 = sum(i * y_i),   Q = sum((y_i - ref)^2)
+
+(``i`` the position inside the window, oldest first; ``ref`` a per-candidate
+frozen centering point — see ``scoring.stats_from_moments`` for why the
+second moment must not be a raw power sum), and a sliding window updates
+each of them with O(1) work per candidate:
+
+    append y_new (window grows to length L):
+        S0 += y_new;  S1 += (L - 1) * y_new;  Q += (y_new - ref)^2
+    evict y_old (window slides, length stays L):
+        S0 -= y_old
+        S1  = S1 - S0_pre + y_old            (every survivor's index drops 1)
+        Q  -= (y_old - ref)^2
+
+The moments are held as float32 Neumaier pairs ``(sum, compensation)`` so a
+week-long stream of ticks cannot drift the accumulators: each add captures
+its own rounding error, keeping the resolved ``sum + comp`` within a few
+float32 ulp of the exact value regardless of tick count — which is what
+keeps the derived statistics inside the same float32-ulp budget the scoring
+suites use against ``candidate_stats`` of the materialized window
+(``scoring.stats_from_moments`` is the shared derivation tail).
+
+Everything is elementwise over the candidate axis, so the kernel streams K
+in TILE-sized blocks with the ``_pad_tiles`` discipline of ``pool_scan`` /
+``score_fuse`` but needs no cross-tile carry — the grid is ``(nt,)``, one
+phase, update + derivation fused per tile:
+
+- ``_stats_update_vec``    : the vectorized jnp fallback (CPU/GPU), a single
+                             fused elementwise pass (jit/vmap friendly).
+- ``_stats_update_pallas`` : the Pallas TPU kernel, identical tile math,
+                             scalar params (window length, evict flag) in
+                             SMEM.  Validated under ``interpret=True`` on
+                             CPU like the other kernels in this package.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..core import scoring
+from .pool_scan import _pad_tiles
+
+DEFAULT_TILE = 1024
+
+
+class StreamMoments(NamedTuple):
+    """Float32 Neumaier pairs of the three streaming moments, each (K,).
+
+    The resolved value of each moment is ``sum + comp``; the compensation
+    terms carry the rounding error of every add/subtract so the pairs stay
+    exact to a few ulp across unbounded tick counts.  ``ref`` is the frozen
+    per-candidate centering point of the second moment — a constant, not an
+    accumulator (re-priming the archive is the only thing that moves it).
+    """
+
+    s0: jax.Array       # sum(y)
+    s0c: jax.Array
+    s1: jax.Array       # sum(i * y), window-relative index, oldest first
+    s1c: jax.Array
+    q: jax.Array        # sum((y - ref)^2)
+    qc: jax.Array
+    ref: jax.Array      # frozen centering point (seed window's mean)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.nbytes) for a in self)
+
+
+def moments_from_window(t3) -> StreamMoments:
+    """Exact cold-start moments of a host (K, T) window.
+
+    The float64 host reductions are split into float32 ``(hi, lo)`` pairs, so
+    the seeded accumulators represent the exact sums to double precision —
+    the same invariant the compensated updates maintain afterwards.  The
+    centering point ``ref`` is frozen at the (float32-rounded) seed-window
+    mean, which keeps both operands of the variance subtraction O(var).
+    """
+    t3 = np.asarray(t3, np.float64)
+    T = t3.shape[-1]
+    idx = np.arange(T, dtype=np.float64)
+
+    def pair(x64):
+        hi = x64.astype(np.float32)
+        lo = (x64 - hi.astype(np.float64)).astype(np.float32)
+        return jnp.asarray(hi), jnp.asarray(lo)
+
+    ref32 = t3.mean(-1).astype(np.float32)
+    d = t3 - ref32.astype(np.float64)[:, None]
+    s0, s0c = pair(t3.sum(-1))
+    s1, s1c = pair(t3 @ idx)
+    q, qc = pair((d * d).sum(-1))
+    return StreamMoments(s0, s0c, s1, s1c, q, qc, jnp.asarray(ref32))
+
+
+def _cadd(s, c, x):
+    """One Neumaier-compensated add: ``(s, c) += x`` exactly to a few ulp."""
+    t = s + x
+    c = c + jnp.where(jnp.abs(s) >= jnp.abs(x), (s - t) + x, (x - t) + s)
+    return t, c
+
+
+def _update_tile(s0, s0c, s1, s1c, q, qc, ref, y_new, y_old, y_first, y_last,
+                 length, evict):
+    """The fused per-tile rank-1 update + Eq. 3 derivation (elementwise).
+
+    ``length`` is the window length *after* the append; ``evict`` gates the
+    subtraction terms (a gated addend of exactly 0.0 is inert under the
+    compensated add, so grow and slide share one op sequence).  The S1 shift
+    term uses the *pre-update* S0 pair — the survivors' index drop happens
+    before the new column joins the sum.
+    """
+    zero = jnp.zeros_like(y_new)
+    gate = lambda x: jnp.where(evict, x, zero)  # noqa: E731
+    s0_pre, s0c_pre = s0, s0c
+    # S1 first: needs pre-update S0 (subtract both halves of the pair so the
+    # compensation survives the hand-off).
+    s1, s1c = _cadd(s1, s1c, (length - 1.0) * y_new)
+    s1, s1c = _cadd(s1, s1c, gate(y_old))
+    s1, s1c = _cadd(s1, s1c, gate(-s0_pre))
+    s1, s1c = _cadd(s1, s1c, gate(-s0c_pre))
+    s0, s0c = _cadd(s0, s0c, y_new)
+    s0, s0c = _cadd(s0, s0c, gate(-y_old))
+    d_new = y_new - ref
+    d_old = y_old - ref
+    q, qc = _cadd(q, qc, d_new * d_new)
+    q, qc = _cadd(q, qc, gate(-(d_old * d_old)))
+    stats = scoring.stats_from_moments(
+        s0 + s0c, s1 + s1c, q + qc, y_first, y_last, length, ref)
+    return (s0, s0c, s1, s1c, q, qc, ref), stats
+
+
+# ---------------------------------------------------------------------------
+# vectorized fallback: one fused elementwise pass.
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=())
+def _stats_update_vec(moments: StreamMoments, y_new, y_old, y_first, y_last,
+                      length, evict):
+    out, stats = _update_tile(*moments, y_new, y_old, y_first, y_last,
+                              length, evict)
+    return StreamMoments(*out), stats
+
+
+# ---------------------------------------------------------------------------
+# Pallas TPU kernel: same tile math, scalars in SMEM, grid (nt,).
+# ---------------------------------------------------------------------------
+
+def _stats_update_kernel(params_ref, s0_ref, s0c_ref, s1_ref, s1c_ref, q_ref,
+                         qc_ref, ref_ref, ynew_ref, yold_ref, yfirst_ref,
+                         ylast_ref, os0_ref, os0c_ref, os1_ref, os1c_ref,
+                         oq_ref, oqc_ref, area_ref, slope_ref, std_ref):
+    length = params_ref[0, 0]
+    evict = params_ref[0, 1] > 0
+    (s0, s0c, s1, s1c, q, qc, _), stats = _update_tile(
+        s0_ref[0, :], s0c_ref[0, :], s1_ref[0, :], s1c_ref[0, :],
+        q_ref[0, :], qc_ref[0, :], ref_ref[0, :], ynew_ref[0, :],
+        yold_ref[0, :], yfirst_ref[0, :], ylast_ref[0, :], length, evict)
+    os0_ref[0, :] = s0
+    os0c_ref[0, :] = s0c
+    os1_ref[0, :] = s1
+    os1c_ref[0, :] = s1c
+    oq_ref[0, :] = q
+    oqc_ref[0, :] = qc
+    area_ref[0, :] = stats.area
+    slope_ref[0, :] = stats.slope
+    std_ref[0, :] = stats.std
+
+
+def _stats_update_pallas(moments: StreamMoments, y_new, y_old, y_first,
+                         y_last, length, evict, *, tile: int = DEFAULT_TILE,
+                         interpret: bool = False):
+    K = y_new.shape[0]
+    tiles = _pad_tiles((*moments, y_new, y_old, y_first, y_last), tile,
+                       (0,) * 11)
+    nt = tiles.pop()
+    params = jnp.stack([jnp.asarray(length, jnp.float32),
+                        jnp.where(evict, 1.0, 0.0).astype(jnp.float32)]
+                       ).reshape(1, 2)
+    row_spec = pl.BlockSpec((1, tile), lambda t: (t, 0))
+    out = pl.pallas_call(
+        _stats_update_kernel,
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((1, 2), lambda t: (0, 0),
+                               memory_space=pltpu.SMEM)] + [row_spec] * 11,
+        out_specs=[row_spec] * 9,
+        out_shape=[jax.ShapeDtypeStruct((nt, tile), jnp.float32)] * 9,
+        interpret=interpret,
+    )(params, *tiles)
+    unpad = lambda x: x.reshape(nt * tile)[:K]  # noqa: E731
+    out = [unpad(x) for x in out]
+    return (StreamMoments(*out[:6], moments.ref),
+            scoring.CandidateStats(*out[6:]))
+
+
+
+def stats_update(moments: StreamMoments, y_new, y_old, y_first, y_last,
+                 length, evict, *, tile: int | None = None,
+                 backend: str | None = None, interpret: bool | None = None):
+    """One collector tick: rank-1-update the moments, derive the statistics.
+
+    Parameters
+    ----------
+    moments : StreamMoments
+        Compensated accumulators of the window *before* this tick.
+    y_new, y_old : (K,) arrays
+        The appended column, and the evicted one (ignored — pass anything of
+        the right shape, e.g. ``y_new`` — when ``evict`` is False).
+    y_first, y_last : (K,) arrays
+        First (oldest) and last column of the window *after* the tick — the
+        trapezoid end corrections of the area.
+    length : scalar
+        Window length after the tick.
+    evict : scalar bool
+        Whether the window was full (slide) or still growing (append only).
+
+    Returns ``(new_moments, CandidateStats)`` where the statistics match
+    ``scoring.candidate_stats`` of the materialized post-tick window at
+    float32-ulp tolerance.  O(K) compute, no (K, T) operand anywhere.
+    ``backend=None`` picks the Pallas kernel on TPU and the vectorized jnp
+    pass elsewhere; ``interpret`` forces the Pallas interpreter (tests).
+    Pinned to float32 like the scoring path, including under
+    ``jax_enable_x64``.  Traceable under ``jit``.
+    """
+    tile = DEFAULT_TILE if tile is None else tile
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    moments = StreamMoments(*(f32(m) for m in moments))
+    args = (moments, f32(y_new), f32(y_old), f32(y_first), f32(y_last),
+            f32(length), jnp.asarray(evict, bool))
+    if backend is None:
+        backend = "pallas" if jax.default_backend() == "tpu" else "vec"
+    if backend == "pallas":
+        interp = (jax.default_backend() != "tpu") if interpret is None \
+            else interpret
+        return _stats_update_pallas(*args, tile=tile, interpret=interp)
+    if backend != "vec":
+        raise ValueError(f"unknown stats_update backend: {backend!r}")
+    return _stats_update_vec(*args)

@@ -13,6 +13,11 @@ shape of traffic efficiently:
 - :class:`BatchServer` — request bucketing to a fixed ladder of padded batch
   sizes, bounding the number of XLA compilations to O(|buckets|) per archive
   width instead of one per distinct batch size.
+
+The live counterpart — rolling archives that absorb collector ticks in O(K),
+versioned cache keys, and deadline-batched admission — lives in
+``repro.stream`` and plugs into this layer via ``BatchServer.serve_archive``
+and ``ArchiveCache.put``/``invalidate``.
 """
 from .archive import ArchiveCache, DeviceArchive  # noqa: F401
 from .server import BatchServer, ServeStats  # noqa: F401

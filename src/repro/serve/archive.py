@@ -66,9 +66,33 @@ class DeviceArchive:
         return stats
 
     @property
+    def t3_operand(self):
+        """The t3 operand for a stats-backed tiled dispatch.
+
+        When the engine scores from cached :meth:`score_stats`, the t3
+        operand of the fused computation is dead (XLA drops it) — it only
+        has to be *some* stable-shaped device array.  The base archive
+        returns the staged slice; rolling archives and snapshots override
+        this with a (K,) statistics array so serving never materializes
+        their logical window.
+        """
+        return self.t3
+
+    @property
     def nbytes(self) -> int:
-        return sum(int(a.nbytes) for a in
-                   (self.t3, self.prices, self.vcpus, self.memory_gb))
+        """Device bytes held by this entry, as seen by the cache budget.
+
+        Includes the memoised ``score_stats`` arrays once materialized —
+        they live on device exactly as long as the entry does, so leaving
+        them out would let a cache full of scored archives blow past
+        ``ArchiveCache.max_bytes`` invisibly.
+        """
+        n = sum(int(a.nbytes) for a in
+                (self.t3, self.prices, self.vcpus, self.memory_gb))
+        stats = self.__dict__.get("_score_stats")
+        if stats is not None:
+            n += sum(int(a.nbytes) for a in stats)
+        return n
 
     def __len__(self) -> int:
         return len(self.host)
@@ -83,9 +107,22 @@ class ArchiveCache:
     re-collected archive naturally misses while an identical slice — even a
     different object — hits.  Pass an explicit ``key`` (e.g. an object-store
     ETag) to skip hashing large archives.
+
+    ``max_bytes`` adds a device-byte budget on top of the entry-count cap:
+    after every insertion (and on explicit :meth:`enforce_budget`) least-
+    recently-used entries are dropped until the tracked footprint —
+    *including* each entry's memoised ``score_stats``, which materialize
+    lazily after insertion — fits.  The most recent entry always survives.
+
+    The live-ingestion path (``repro.stream``) doesn't stage through ``get``:
+    a rolling archive re-keys itself on every appended column, so the
+    ingestor :meth:`put`\\ s the fresh version and :meth:`invalidate`\\ s the
+    stale key instead — a lookup under an old version's key misses rather
+    than silently serving a newer window.
     """
 
     capacity: int = 4
+    max_bytes: int | None = None
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -94,6 +131,8 @@ class ArchiveCache:
     def __post_init__(self):
         if self.capacity < 1:
             raise ValueError("capacity must be >= 1")
+        if self.max_bytes is not None and self.max_bytes < 1:
+            raise ValueError("max_bytes must be >= 1")
 
     def get(self, cands: CandidateSet, *, key: str | None = None) -> DeviceArchive:
         key = key if key is not None else cands.fingerprint()
@@ -105,10 +144,29 @@ class ArchiveCache:
         self.misses += 1
         entry = DeviceArchive.stage(cands, key=key)
         self._entries[key] = entry
-        while len(self._entries) > self.capacity:
+        self.enforce_budget()
+        return entry
+
+    def put(self, entry) -> None:
+        """Insert (or refresh) an already-staged entry under ``entry.key``."""
+        self._entries[entry.key] = entry
+        self._entries.move_to_end(entry.key)
+        self.enforce_budget()
+
+    def invalidate(self, key: str) -> bool:
+        """Drop ``key`` if present.  Not counted as a capacity eviction."""
+        return self._entries.pop(key, None) is not None
+
+    def enforce_budget(self) -> None:
+        """Evict LRU-first down to the entry-count and byte budgets."""
+        while len(self._entries) > self.capacity or (
+                self.max_bytes is not None and len(self._entries) > 1
+                and self.nbytes > self.max_bytes):
             self._entries.popitem(last=False)
             self.evictions += 1
-        return entry
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._entries
 
     def __len__(self) -> int:
         return len(self._entries)

@@ -118,7 +118,23 @@ class BatchServer:
         requests = list(requests)
         if not requests:
             return []
-        archive = self.cache.get(cands, key=archive_key)
+        return self.serve_archive(self.cache.get(cands, key=archive_key),
+                                  requests)
+
+    def serve_archive(self, archive, requests) -> list[Recommendation]:
+        """Serve against an already-staged archive, bypassing the LRU.
+
+        This is the live-ingestion entry point (``repro.stream``): a rolling
+        archive — or a version-pinned snapshot of one — re-keys itself every
+        collector tick, so routing it through ``cache.get`` would re-hash
+        and re-stage; the ingestor manages cache membership itself via
+        ``put``/``invalidate`` and drains hand the archive straight here.
+        Bucketing, padding, and stats accounting are identical to
+        :meth:`serve`.
+        """
+        requests = list(requests)
+        if not requests:
+            return []
         out: list[Recommendation] = []
         pos = 0
         for chunk_len, bucket in self.plan_chunks(len(requests)):

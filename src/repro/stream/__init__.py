@@ -1,0 +1,21 @@
+"""Live-ingestion subsystem: streaming collector -> serving pipeline.
+
+The serve layer (``repro.serve``) treats every archive as an immutable
+snapshot; this package makes it *live*.  The Fig. 3 loop — rate-limited SPS
+queries -> T3 archive -> scoring window -> recommendations — becomes:
+
+    DataCollector  --one (K,) column per tick-->  LiveIngestor
+        -> RollingDeviceArchive.append     (donated in-place slot write, O(K))
+        -> kernels.stats_update            (rank-1 Eq. 3 stats update, O(K))
+        -> versioned key put/invalidate    (ArchiveCache never serves stale)
+    AdmissionQueue.submit -> deadline/size-triggered drains
+        -> ArchiveSnapshot (version-pinned)  -> BatchServer.serve_archive
+
+Nothing O(K*T) runs after the initial :meth:`LiveIngestor.prime`: appending
+a column to a staged K=32768, T=1008 archive is O(K) work — no host->device
+re-transfer, no statistics recompute (see
+``benchmarks/ingest_throughput.py``).
+"""
+from .admission import AdmissionQueue, AdmissionStats, Ticket  # noqa: F401
+from .ingest import LiveIngestor  # noqa: F401
+from .rolling import ArchiveSnapshot, RollingDeviceArchive  # noqa: F401

@@ -1,0 +1,250 @@
+"""Async admission in front of :class:`~repro.serve.BatchServer`.
+
+``BatchServer.serve`` batches whatever one *call site* hands it — the paper's
+service, though, sees requests *arrive* one at a time, and the batch that
+actually dispatches should be shaped by arrival time and latency budget, not
+by which caller happened to hold a list.  :class:`AdmissionQueue` adds that
+front:
+
+- :meth:`submit` enqueues a request with a deadline (``now + max_wait``) and
+  returns a :class:`Ticket` immediately;
+- a drain fires when the earliest deadline comes due **or** the queue
+  reaches the largest serve bucket — and then takes *everything* pending,
+  so late arrivals coalesce into the due batch instead of waiting their own
+  full ``max_wait`` (arrival batching, not call-site batching);
+- every drain serves against **one** version-pinned snapshot of the live
+  archive taken at drain start, so a collector tick landing mid-drain can
+  never mix two windows inside a batch; the served version is stamped into
+  each result's diagnostics.
+
+The queue is deterministic by construction (injectable ``clock``, explicit
+:meth:`pump`), which is what the tests drive; :meth:`start` spins the same
+logic on a daemon thread for wall-clock operation, and ticket ``result()``
+falls back to a synchronous force-drain when no worker is running.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+from ..serve.server import BatchServer
+
+DEFAULT_MAX_WAIT_S = 0.05
+
+
+class Ticket:
+    """Handle for one admitted request; resolves when its drain completes."""
+
+    __slots__ = ("request", "deadline", "_queue", "_event", "_result",
+                 "_error")
+
+    def __init__(self, request, deadline: float, queue: "AdmissionQueue"):
+        self.request = request
+        self.deadline = deadline
+        self._queue = queue
+        self._event = threading.Event()
+        self._result = None
+        self._error = None
+
+    @property
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: float | None = None):
+        """The :class:`~repro.core.types.Recommendation` for this request.
+
+        With a background worker running, blocks until the drain that picks
+        this ticket up completes (or ``timeout`` expires).  Without one,
+        synchronously force-drains the queue — the no-thread mode used by
+        scripts and tests.
+        """
+        if not self._event.is_set() and not self._queue.running:
+            self._queue.drain(force=True)
+        if not self._event.wait(timeout):
+            raise TimeoutError("admission ticket not served within timeout")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def _resolve(self, result=None, error=None) -> None:
+        self._result = result
+        self._error = error
+        self._event.set()
+
+
+@dataclass
+class AdmissionStats:
+    """Counters accumulated across drains."""
+
+    submitted: int = 0
+    served: int = 0
+    drains: int = 0
+    coalesced: int = 0          # served before their own deadline came due
+    versions: dict = field(default_factory=dict)   # archive key -> #requests
+
+    def record_drain(self, n: int, n_early: int, key: str) -> None:
+        self.drains += 1
+        self.served += n
+        self.coalesced += n_early
+        self.versions[key] = self.versions.get(key, 0) + n
+
+
+class AdmissionQueue:
+    """Deadline-batched arrival queue over a ``BatchServer``.
+
+    Parameters
+    ----------
+    server : BatchServer
+        The batching executor drains dispatch through
+        (:meth:`BatchServer.serve_archive`).
+    archive_source
+        Where a drain gets its archive: a :class:`RollingDeviceArchive` (or
+        any object with ``snapshot()`` — the snapshot pins the version for
+        the whole drain), a plain ``DeviceArchive``, or a zero-arg callable
+        returning either (e.g. ``lambda: ingestor.archive``).
+    max_wait_s : float
+        Default admission deadline: a request waits at most this long
+        before the batch it joined dispatches.
+    max_pending : int, optional
+        Queue length that triggers an immediate drain (default: the
+        server's largest bucket — a full batch gains nothing by waiting).
+    clock : callable
+        Monotonic time source (tests inject a fake).
+    """
+
+    def __init__(self, server: BatchServer, archive_source, *,
+                 max_wait_s: float = DEFAULT_MAX_WAIT_S,
+                 max_pending: int | None = None, clock=time.monotonic):
+        if max_wait_s < 0:
+            raise ValueError("max_wait_s must be >= 0")
+        self.server = server
+        self._source = archive_source
+        self.max_wait_s = max_wait_s
+        self.max_pending = (max(server.bucket_sizes) if max_pending is None
+                            else max_pending)
+        self.clock = clock
+        self.stats = AdmissionStats()
+        self._pending: list[Ticket] = []
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._worker: threading.Thread | None = None
+        self._stopping = False
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, request, *, max_wait_s: float | None = None) -> Ticket:
+        """Admit one request; returns immediately with its :class:`Ticket`."""
+        wait = self.max_wait_s if max_wait_s is None else max_wait_s
+        ticket = Ticket(request, self.clock() + wait, self)
+        with self._wake:
+            self._pending.append(ticket)
+            self.stats.submitted += 1
+            self._wake.notify()
+        return ticket
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    @property
+    def running(self) -> bool:
+        return self._worker is not None and self._worker.is_alive()
+
+    def due(self, now: float | None = None) -> bool:
+        """Should a drain fire now?  (earliest deadline hit, or queue full)"""
+        now = self.clock() if now is None else now
+        with self._lock:
+            return bool(self._pending) and (
+                len(self._pending) >= self.max_pending
+                or min(t.deadline for t in self._pending) <= now)
+
+    # -- drain -------------------------------------------------------------
+
+    def _resolve_archive(self):
+        src = self._source() if callable(self._source) else self._source
+        if src is None:
+            raise RuntimeError("archive_source produced no archive "
+                               "(ingestor not primed?)")
+        snap = getattr(src, "snapshot", None)
+        return snap() if snap is not None else src
+
+    def pump(self, now: float | None = None) -> int:
+        """Drain iff due; returns requests served.  The test-mode heartbeat."""
+        return self.drain(now=now) if self.due(now) else 0
+
+    def drain(self, now: float | None = None, *, force: bool = False) -> int:
+        """Serve everything pending against one version-pinned snapshot.
+
+        Coalescing: the drain takes the whole queue, not just the due
+        tickets — a request submitted a microsecond ago rides along with the
+        batch whose deadline fired.  ``force`` drains even when nothing is
+        due (shutdown, synchronous ``Ticket.result``).
+        """
+        now = self.clock() if now is None else now
+        with self._lock:
+            if not self._pending or not (force or any(
+                    t.deadline <= now for t in self._pending)
+                    or len(self._pending) >= self.max_pending):
+                return 0
+            batch, self._pending = self._pending, []
+        try:
+            archive = self._resolve_archive()
+            recs = self.server.serve_archive(
+                archive, [t.request for t in batch])
+        except Exception as err:  # noqa: BLE001 — fail the tickets, not the loop
+            for t in batch:
+                t._resolve(error=err)
+            raise
+        n_early = sum(1 for t in batch if t.deadline > now)
+        key = getattr(archive, "key", "?")
+        version = getattr(archive, "version", None)
+        for t, rec in zip(batch, recs):
+            rec.diagnostics["archive_key"] = key
+            if version is not None:
+                rec.diagnostics["archive_version"] = version
+            t._resolve(result=rec)
+        self.stats.record_drain(len(batch), n_early, key)
+        return len(batch)
+
+    # -- background operation ---------------------------------------------
+
+    def start(self) -> "AdmissionQueue":
+        """Run the drain loop on a daemon thread (wall-clock mode)."""
+        if self.running:
+            return self
+        self._stopping = False
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="admission-drain")
+        self._worker.start()
+        return self
+
+    def stop(self, *, drain: bool = True) -> None:
+        """Stop the worker; optionally force-drain what's left."""
+        with self._wake:
+            self._stopping = True
+            self._wake.notify()
+        if self._worker is not None:
+            self._worker.join()
+            self._worker = None
+        if drain:
+            self.drain(force=True)
+
+    def _loop(self) -> None:
+        while True:
+            with self._wake:
+                if self._stopping:
+                    return
+                if not self._pending:
+                    self._wake.wait(timeout=0.2)
+                    continue
+                timeout = max(0.0, min(t.deadline for t in self._pending)
+                              - self.clock())
+                if timeout > 0 and len(self._pending) < self.max_pending:
+                    self._wake.wait(timeout=min(timeout, 0.2))
+                    continue
+            try:
+                self.drain()
+            except Exception:  # noqa: BLE001 — tickets already carry the error
+                pass

@@ -1,0 +1,102 @@
+"""Collector -> rolling archive -> versioned cache: the live-ingestion loop.
+
+:class:`LiveIngestor` is the glue of the Fig. 3 pipeline's right half.  It
+stages the collector's current scoring window once (:meth:`prime`), then
+absorbs each collector tick as a single O(K) column append
+(:meth:`poll` / :meth:`ingest_tick`) — never re-staging the (K, T) slice,
+never recomputing the O(K*T) statistics — and keeps the serve layer's
+:class:`~repro.serve.ArchiveCache` membership honest across versions: the
+fresh versioned key is ``put`` and the stale one ``invalidate``\\ d, so a
+batch routed through the cache can only ever hit the window it asked for.
+"""
+from __future__ import annotations
+
+from ..cloudsim.collector import DataCollector
+from ..serve.archive import ArchiveCache
+from .rolling import RollingDeviceArchive
+
+
+class LiveIngestor:
+    """Incrementally feed a :class:`DataCollector`'s archive to serving.
+
+    Parameters
+    ----------
+    collector : DataCollector
+        The live collection loop.  Configure its host ring
+        (``CollectorConfig.ring_capacity``) at least as large as ``window``
+        so per-tick column reads stay O(K).
+    window : int
+        Scoring-window length (columns) the served archive holds.
+    cache : ArchiveCache, optional
+        When given, the ingestor maintains the rolling archive's cache
+        entry: every tick inserts the new version and drops the stale one.
+    name : str, optional
+        Stable archive identity used in the versioned keys (defaults to the
+        staged window's content fingerprint).
+    """
+
+    def __init__(self, collector: DataCollector, *, window: int,
+                 cache: ArchiveCache | None = None, name: str | None = None):
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.collector = collector
+        self.window = window
+        self.cache = cache
+        self._name = name
+        self.archive: RollingDeviceArchive | None = None
+        self._ingested = 0                    # collector ticks absorbed
+
+    def prime(self) -> RollingDeviceArchive:
+        """Cold-start: stage the current window as the rolling archive.
+
+        The one place the O(K*T) path runs (device transfer + exact moment
+        seeding); every later tick is O(K).  Re-priming replaces the archive
+        and its cache entry.
+        """
+        if self.collector.ticks < 1:
+            raise ValueError("collector has no completed ticks to stage")
+        old_key = self.archive.key if self.archive is not None else None
+        cands = self.collector.to_candidate_set(window=self.window)
+        self.archive = RollingDeviceArchive(cands, capacity=self.window,
+                                            name=self._name)
+        self._ingested = self.collector.ticks
+        if self.cache is not None:
+            if old_key is not None:
+                self.cache.invalidate(old_key)
+            self.cache.put(self.archive)
+        return self.archive
+
+    @property
+    def version(self) -> int:
+        return -1 if self.archive is None else self.archive.version
+
+    @property
+    def lag(self) -> int:
+        """Collector ticks not yet absorbed into the served archive."""
+        return self.collector.ticks - self._ingested
+
+    def ingest_tick(self) -> RollingDeviceArchive:
+        """Absorb exactly one pending collector tick (O(K))."""
+        if self.archive is None:
+            raise RuntimeError("prime() the ingestor before ingesting ticks")
+        if self.lag <= 0:
+            raise RuntimeError("no pending collector tick to ingest")
+        # Invalidate the stale key *before* the in-place append: the cache
+        # entry is this same mutable object, so dropping it afterwards would
+        # leave a window where a lookup under the old version's key serves
+        # the new window — the exact staleness bug versioned keys exist to
+        # prevent.
+        if self.cache is not None:
+            self.cache.invalidate(self.archive.key)
+        self.archive.append(self.collector.column(self._ingested))
+        self._ingested += 1
+        if self.cache is not None:
+            self.cache.put(self.archive)
+        return self.archive
+
+    def poll(self) -> int:
+        """Absorb every pending collector tick; return how many."""
+        n = self.lag
+        for _ in range(n):
+            self.ingest_tick()
+        return n

@@ -213,6 +213,52 @@ def test_archive_cache_lru(cands):
     assert cache.misses == 4
 
 
+def test_device_archive_nbytes_counts_materialized_stats(cands):
+    """`nbytes` must grow when the memoised score_stats materialize — they
+    are device-resident exactly as long as the entry is."""
+    arch = DeviceArchive.stage(cands)
+    base = arch.nbytes
+    stats = arch.score_stats()
+    grown = arch.nbytes
+    assert grown == base + sum(int(a.nbytes) for a in stats)
+    assert arch.score_stats() is stats          # memoised, not recomputed
+    assert arch.nbytes == grown                 # and counted exactly once
+
+
+def test_archive_cache_byte_budget_eviction_order():
+    """Byte-budget eviction must see lazily-materialized stats: scoring a
+    cached archive can push the cache over budget, and the next insertion
+    then evicts LRU-first."""
+    c1, c2, c3 = (synth_candidates(40 + i, K=24, T=16) for i in range(3))
+    probe = DeviceArchive.stage(c1)
+    plain = probe.nbytes
+    stats_bytes = sum(int(a.nbytes) for a in probe.score_stats())
+    # budget: three plain archives plus one stats set fit — three archives
+    # with *two* stats sets do not
+    cache = ArchiveCache(capacity=8, max_bytes=3 * plain + stats_bytes)
+    a1 = cache.get(c1)
+    a2 = cache.get(c2)
+    assert len(cache) == 2 and cache.evictions == 0
+    a1.score_stats()                    # a1 fattens past the plain estimate
+    a2.score_stats()                    # over budget now, visible at next put
+    cache.get(c3)                       # insertion enforces the budget
+    # eviction is LRU-order: a1 (oldest) goes, a2 + the new entry then fit
+    assert cache.evictions == 1
+    assert c1.fingerprint() not in cache
+    assert c2.fingerprint() in cache and c3.fingerprint() in cache
+    # with the stats bytes invisible (the old bug) nothing would have been
+    # evicted: three plain archives fit the budget
+    assert 3 * plain <= cache.max_bytes
+
+
+def test_archive_cache_byte_budget_keeps_most_recent():
+    """The newest entry always survives, even when alone over budget."""
+    c = synth_candidates(50, K=40, T=64)
+    cache = ArchiveCache(capacity=4, max_bytes=1)     # absurdly tight
+    a = cache.get(c)
+    assert len(cache) == 1 and a.nbytes > 1           # kept regardless
+
+
 def test_device_archive_roundtrip(cands, engine):
     arch = DeviceArchive.stage(cands)
     req = ResourceRequest(cpus=96.0, weight=0.6)

@@ -77,6 +77,39 @@ def test_collector_and_engine_end_to_end():
     assert rec_m.num_types >= 1
 
 
+def test_collector_ring_fast_path_output_unchanged():
+    """`to_candidate_set(window=...)` via the host ring must be identical to
+    the python-list slow path — t3 matrix, dtypes, and catalog columns."""
+    def build(ring_capacity):
+        mkt = SpotMarket(Catalog(seed=12, n_regions=1), seed=12)
+        svc = SPSQueryService(mkt, n_accounts=300)
+        targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[::17][:20]]
+        col = DataCollector(svc, targets,
+                            CollectorConfig(ring_capacity=ring_capacity))
+        col.run(18)
+        return col
+
+    fast, slow = build(ring_capacity=8), build(ring_capacity=None)
+    for window in (1, 3, 8, None, 0, 12, 50):
+        # ring covers windows <= 8; larger/None fall back to the lists
+        a = fast.to_candidate_set(window=window)
+        b = slow.to_candidate_set(window=window)
+        np.testing.assert_array_equal(a.t3, b.t3)
+        assert a.t3.dtype == b.t3.dtype
+        for col_a, col_b in zip(
+                (a.names, a.regions, a.azs, a.families, a.categories,
+                 a.vcpus, a.memory_gb, a.prices),
+                (b.names, b.regions, b.azs, b.families, b.categories,
+                 b.vcpus, b.memory_gb, b.prices)):
+            np.testing.assert_array_equal(col_a, col_b)
+    # the per-tick live feed agrees with the archive lists, in and out of
+    # the ring's coverage (ticks 0..9 have been evicted from capacity 8)
+    for i in (0, 5, 10, 17, -1):
+        np.testing.assert_array_equal(fast.column(i), slow.column(i))
+    with pytest.raises(IndexError):
+        fast.column(18)
+
+
 def test_engine_weight_monotonicity():
     """W=1 pool should have avg availability >= W=0 pool (Fig. 16)."""
     mkt = SpotMarket(Catalog(seed=9, n_regions=1), seed=9)
