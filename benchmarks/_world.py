@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import functools
+import time
 
 import numpy as np
 
@@ -29,9 +30,31 @@ def collected(seed: int = 42, n_targets: int = 80, cycles: int = 40,
 
 
 def timer():
-    import time
     t0 = time.perf_counter()
     return lambda: (time.perf_counter() - t0) * 1e6  # microseconds
+
+
+def bench_best(fn, *, min_reps: int = 2, budget: float = 0.6,
+               max_reps: int = 200) -> float:
+    """Best-of wall-clock seconds for ``fn()`` under a fixed time budget.
+
+    The one timing loop every scaling benchmark shares (warm call first,
+    then best-of until both ``min_reps`` and ``budget`` are satisfied,
+    hard-capped at ``max_reps``) — methodology changes land here once
+    instead of drifting per module.
+    """
+    fn()                                   # warm (compile + caches)
+    best = np.inf
+    t_start = time.perf_counter()
+    reps = 0
+    while reps < min_reps or time.perf_counter() - t_start < budget:
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+        reps += 1
+        if reps >= max_reps:
+            break
+    return best
 
 
 def row(name: str, us: float, **derived) -> str:

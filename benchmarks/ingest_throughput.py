@@ -47,7 +47,7 @@ from repro.core.types import CandidateSet
 from repro.serve import BatchServer, DeviceArchive
 from repro.stream import AdmissionQueue, LiveIngestor, RollingDeviceArchive
 
-from ._world import row
+from ._world import bench_best, row
 
 ARTIFACT = Path(__file__).resolve().parent / "BENCH_ingest.json"
 
@@ -68,19 +68,8 @@ STAT_RTOL = 1e-5
 STAT_ATOL = 1e-4
 
 
-def _bench(fn, *, min_reps: int = 2, budget: float = LOOP_SECONDS) -> float:
-    fn()                                   # warm (compile + caches)
-    best = np.inf
-    t_start = time.perf_counter()
-    reps = 0
-    while reps < min_reps or time.perf_counter() - t_start < budget:
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-        reps += 1
-        if reps >= 200:
-            break
-    return best
+def _bench(fn, **kw):
+    return bench_best(fn, budget=LOOP_SECONDS, **kw)
 
 
 def _candidates(K: int, T: int, seed: int = 0) -> CandidateSet:

@@ -40,7 +40,7 @@ from repro.core import pool as pool_lib
 from repro.core.types import CandidateSet
 from repro.kernels.pool_scan import DEFAULT_TILE
 
-from ._world import row
+from ._world import bench_best, row
 
 ARTIFACT = Path(__file__).resolve().parent / "BENCH_pool_scan.json"
 
@@ -61,20 +61,8 @@ REGRESSION_TOLERANCE = 0.20    # CI check: allowed speedup regression
 CHECK_SPEEDUP_CAP = 20.0
 
 
-def _bench(fn, *, min_reps: int = 2, budget: float = LOOP_SECONDS) -> float:
-    """Best-of wall-clock seconds for fn() under a fixed time budget."""
-    fn()                                   # warm (compile + caches)
-    best = np.inf
-    t_start = time.perf_counter()
-    reps = 0
-    while reps < min_reps or time.perf_counter() - t_start < budget:
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-        reps += 1
-        if reps >= 50:
-            break
-    return best
+def _bench(fn, **kw):
+    return bench_best(fn, budget=LOOP_SECONDS, max_reps=50, **kw)
 
 
 def _scan_instance(K: int, seed: int = 0):

@@ -27,6 +27,7 @@ MODULES = [
     "pool_scan_scaling",
     "scoring_scaling",
     "ingest_throughput",
+    "shard_scaling",
     "kernels_micro",
     "roofline",
 ]

@@ -46,7 +46,7 @@ from repro.core import engine as engine_lib
 from repro.core import pool as pool_lib
 from repro.core import scoring
 
-from ._world import row
+from ._world import bench_best, row
 
 ARTIFACT = Path(__file__).resolve().parent / "BENCH_scoring.json"
 
@@ -72,20 +72,8 @@ SCORE_RTOL = 1e-5
 SCORE_ATOL = 1e-4
 
 
-def _bench(fn, *, min_reps: int = 2, budget: float = LOOP_SECONDS) -> float:
-    """Best-of wall-clock seconds for fn() under a fixed time budget."""
-    fn()                                   # warm (compile + caches)
-    best = np.inf
-    t_start = time.perf_counter()
-    reps = 0
-    while reps < min_reps or time.perf_counter() - t_start < budget:
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-        reps += 1
-        if reps >= 50:
-            break
-    return best
+def _bench(fn, **kw):
+    return bench_best(fn, budget=LOOP_SECONDS, max_reps=50, **kw)
 
 
 def _instance(K: int, T: int, seed: int = 0):

@@ -15,7 +15,7 @@ import numpy as np
 from repro.core import RecommendationEngine, ResourceRequest
 from repro.serve import BatchServer, DeviceArchive
 
-from ._world import collected, row, timer
+from ._world import bench_best, collected, row, timer
 
 BATCH_SIZES = (1, 8, 64, 256)
 LOOP_SECONDS = 0.6       # measurement budget per timing loop
@@ -36,19 +36,8 @@ def _requests(n: int, regions, seed: int = 0) -> list[ResourceRequest]:
 
 
 def _bench(fn, reps_hint: int = 3) -> float:
-    """Best-of wall-clock seconds for fn() under a fixed time budget."""
-    fn()                                   # warm (compile + caches)
-    best = np.inf
-    t_start = time.perf_counter()
-    reps = 0
-    while reps < reps_hint or time.perf_counter() - t_start < LOOP_SECONDS:
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-        reps += 1
-        if reps >= 50:
-            break
-    return best
+    return bench_best(fn, min_reps=reps_hint, budget=LOOP_SECONDS,
+                      max_reps=50)
 
 
 def run() -> list[str]:

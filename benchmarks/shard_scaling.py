@@ -1,0 +1,255 @@
+"""K-axis sharding: multi-device recommend_batch parity + scaling lane.
+
+Measures what splitting the candidate axis across devices does to one
+``recommend_batch`` dispatch (B = 16 heterogeneous requests) at the paper's
+scoring window, sweeping archive width K and shard count:
+
+- ``single`` — the single-device tiled baseline (``DeviceArchive`` +
+  ``score_impl="tiled"``), the path every parity suite anchors on;
+- ``shardN`` — the same batch against a ``repro.shard.ShardedArchive``
+  split N ways (per-shard phase-0 carries, exact scalar merge, per-shard
+  emission, merge-device pool scan).
+
+Every executed configuration cross-checks the acceptance contract: sharded
+pools **bit-identical** to the single-device tiled path (members, order,
+counts, hourly cost — and, on this pipeline, the score rows bit for bit),
+plus a rolling-archive lane (per-shard ingest ticks, then recommend_batch
+vs a cold full-window re-stage).
+
+Throughput numbers here are *reported, not gated on a speedup*: with
+``--xla_force_host_platform_device_count`` the "devices" share the same
+physical cores, so multi-shard wall time on a CI box measures dispatch
+overhead, not the multi-host scaling the layer exists for.  ``--check``
+gates on parity (the bit-identical contract) and a loose sanity floor
+(sharded throughput must stay within 10x of single-device) so a
+pathological regression still fails the lane.
+
+Modes::
+
+    python -m benchmarks.shard_scaling                 # full sweep,
+        # writes the committed benchmarks/BENCH_shard.json artifact
+    python -m benchmarks.shard_scaling --smoke         # small-K sweep
+    python -m benchmarks.shard_scaling --smoke --check benchmarks/BENCH_shard.json
+        # CI lane: fail on any parity divergence or sanity-floor breach
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+
+When imported standalone (the CI lane), this module forces 4 host-platform
+devices *before* jax initializes so the shards land on distinct devices;
+under ``benchmarks.run`` (jax already imported) it shards on whatever
+devices exist — parity is a property of the math, not the device count.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+if "jax" not in sys.modules and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.spotvista import CONFIG
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.core.types import CandidateSet
+from repro.serve import DeviceArchive
+from repro.shard import ShardedArchive, ShardedRollingArchive
+
+from ._world import bench_best, row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_shard.json"
+
+T_WINDOW = int(CONFIG.window_days * 24 * 60 / CONFIG.collect_period_min)
+T_SMOKE = 168
+K_SWEEP = (4096, 16384, 32768)
+K_SMOKE = (512, 2048)
+SHARDS = (1, 2, 4)
+BATCH = 16
+LOOP_SECONDS = 0.6
+SANITY_FACTOR = 10.0     # sharded must stay within this of single-device
+
+
+def _bench(fn, **kw):
+    return bench_best(fn, budget=LOOP_SECONDS, **kw)
+
+
+def _candidates(K: int, T: int, seed: int = 0) -> CandidateSet:
+    rng = np.random.default_rng(seed)
+    fams = rng.choice(["m5", "c5", "r5", "t3"], K)
+    return CandidateSet(
+        names=np.array([f"{fams[i]}.x{i}" for i in range(K)]),
+        regions=rng.choice(["us-east-1", "eu-west-1"], K),
+        azs=rng.choice(["a", "b", "c"], K),
+        families=fams,
+        categories=rng.choice(["general", "compute", "memory"], K),
+        vcpus=rng.choice([2, 4, 8, 16, 32, 64, 96], K).astype(np.float64),
+        memory_gb=rng.choice([4, 8, 16, 64, 128, 384], K).astype(np.float64),
+        prices=rng.uniform(0.01, 5.0, K),
+        t3=rng.uniform(0.0, 50.0, (K, T)),
+    )
+
+
+def _requests(cands: CandidateSet, n: int = BATCH):
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(n):
+        kw = ({"cpus": float(rng.integers(8, 1500))} if i % 2
+              else {"memory_gb": float(rng.integers(16, 3000))})
+        if i % 3 == 0:
+            kw["regions"] = [str(rng.choice(cands.regions))]
+        reqs.append(ResourceRequest(weight=float(np.round(rng.random(), 3)),
+                                    lam=float(np.round(rng.random() * 0.5, 3)),
+                                    **kw))
+    return reqs
+
+
+def _pools_identical(a, b) -> bool:
+    return (list(a.names) == list(b.names)
+            and np.array_equal(a.counts, b.counts)
+            and a.hourly_cost == b.hourly_cost)
+
+
+def _measure_width(K: int, T: int) -> dict:
+    cands = _candidates(K, T)
+    reqs = _requests(cands)
+    engine = RecommendationEngine(score_impl="tiled", pool_impl="tiled")
+    single_arch = DeviceArchive.stage(cands, key=f"single{K}")
+    single = engine.recommend_batch(cands, reqs, archive=single_arch)
+    t_single = _bench(lambda: engine.recommend_batch(
+        cands, reqs, archive=single_arch))
+    out = {"K": K, "T": T, "batch": BATCH,
+           "single_rps": BATCH / t_single, "shards": {}}
+    for n in SHARDS:
+        if n > K:
+            continue
+        arch = ShardedArchive.stage(cands, n_shards=n, key=f"sh{K}x{n}")
+        recs = engine.recommend_batch(cands, reqs, archive=arch)
+        parity = all(_pools_identical(a, b) for a, b in zip(single, recs))
+        t = _bench(lambda: engine.recommend_batch(cands, reqs, archive=arch))
+        out["shards"][str(n)] = {"rps": BATCH / t, "parity": parity,
+                                 "vs_single": t_single / t}
+    return out
+
+
+def _rolling_parity(K: int = 512, T: int = 64, n_shards: int = 4,
+                    ticks: int = 4) -> bool:
+    """Per-shard ingest ticks, then recommend_batch vs cold re-stage."""
+    cands = _candidates(K, T, seed=5)
+    arch = ShardedRollingArchive(cands, n_shards=n_shards, name="bench")
+    engine = RecommendationEngine(score_impl="tiled", pool_impl="tiled")
+    reqs = _requests(cands, 8)
+    rng = np.random.default_rng(11)
+    for _ in range(ticks):
+        arch.append(rng.uniform(0.0, 50.0, K))
+        live = engine.recommend_batch(arch.host, reqs, archive=arch)
+        cold_set = _candidates(K, T, seed=5)
+        cold_set.t3 = arch.materialize().astype(np.float64)
+        cold = engine.recommend_batch(
+            cold_set, reqs, archive=DeviceArchive.stage(cold_set))
+        if not all(_pools_identical(a, b) for a, b in zip(live, cold)):
+            return False
+    return True
+
+
+def _rows(widths) -> list[str]:
+    lines = []
+    for w in widths:
+        for n, s in w["shards"].items():
+            lines.append(row(
+                f"shard/K{w['K']}_T{w['T']}_s{n}", 1e6 * w["batch"] / s["rps"],
+                rps=round(s["rps"], 1), vs_single=round(s["vs_single"], 3),
+                parity=s["parity"]))
+    return lines
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size sweep."""
+    widths = [_measure_width(K, T_SMOKE) for K in K_SMOKE]
+    ok = all(s["parity"] for w in widths for s in w["shards"].values())
+    if not ok:
+        raise AssertionError("sharded pools diverged from single-device path")
+    if not _rolling_parity():
+        raise AssertionError("sharded rolling ticks diverged from cold restage")
+    return _rows(widths)
+
+
+def _full() -> dict:
+    widths = [_measure_width(K, T_WINDOW) for K in K_SWEEP]
+    smoke = [_measure_width(K, T_SMOKE) for K in K_SMOKE]
+    return {
+        "meta": {"backend": jax.default_backend(),
+                 "devices": len(jax.devices()),
+                 "T_window": T_WINDOW, "T_smoke": T_SMOKE, "batch": BATCH},
+        "sweep": widths,
+        "smoke": smoke,
+        "rolling_parity": _rolling_parity(),
+    }
+
+
+def _check(artifact: Path) -> int:
+    committed = json.loads(artifact.read_text())
+    del committed  # the gate is parity + sanity, not runner-relative speed
+    ok = True
+    for K in K_SMOKE:
+        w = _measure_width(K, T_SMOKE)
+        for n, s in w["shards"].items():
+            print(row(f"shard/check_K{K}_s{n}", 1e6 * BATCH / s["rps"],
+                      rps=round(s["rps"], 1),
+                      vs_single=round(s["vs_single"], 3),
+                      parity=s["parity"]))
+            if not s["parity"]:
+                print(f"# FAIL: sharded pools diverged at K={K}, "
+                      f"n_shards={n}", file=sys.stderr)
+                ok = False
+            if s["vs_single"] < 1.0 / SANITY_FACTOR:
+                print(f"# FAIL: sharded throughput collapsed at K={K}, "
+                      f"n_shards={n} ({s['vs_single']:.3f}x of single-device,"
+                      f" sanity floor {1.0 / SANITY_FACTOR:.1f}x)",
+                      file=sys.stderr)
+                ok = False
+    if not _rolling_parity():
+        print("# FAIL: sharded rolling ticks diverged from cold restage",
+              file=sys.stderr)
+        ok = False
+    print(f"# shard check {'ok' if ok else 'FAILED'} "
+          f"({len(jax.devices())} devices)", file=sys.stderr)
+    return 0 if ok else 1
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-K sweep only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="parity/sanity gate against a committed "
+                         "BENCH_shard.json; exits non-zero on divergence")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full sweep")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    print("name,us_per_call,derived")
+    if args.smoke:
+        for line in run():
+            print(line)
+        return
+    payload = _full()
+    for line in _rows(payload["sweep"]):
+        print(line)
+    bad = [1 for w in payload["sweep"] for s in w["shards"].values()
+           if not s["parity"]]
+    if bad or not payload["rolling_parity"]:
+        raise SystemExit("# FAIL: sharded pools diverged")
+    args.out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

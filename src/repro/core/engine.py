@@ -189,6 +189,13 @@ class RecommendationEngine:
         return comb, avail, cost
 
     def recommend(self, cands: CandidateSet, req: ResourceRequest) -> Recommendation:
+        """One request through filter -> score -> Algorithm 1.
+
+        Raises ``ValueError`` when the filters leave no candidate — the
+        same empty-filter contract :meth:`recommend_batch` applies per
+        batch row, so the two entry points never disagree on whether a
+        request is servable.
+        """
         mask = req.filter_mask(cands)
         if not mask.any():
             raise ValueError("no candidates satisfy the request filters")
@@ -231,19 +238,55 @@ class RecommendationEngine:
         candidate reductions themselves — MinMax, C_min, prefix sums — are
         masked, not gathered, precisely so they stay exact.)
 
+        Empty-filter contract (shared with :meth:`recommend`): a request
+        whose filters leave **no** candidate raises ``ValueError`` — for a
+        batch, naming the offending row — before anything dispatches.  An
+        all-masked row must never reach the fused computation: the masked
+        Algorithm 1 scan would terminate degenerately at k = 0 and emit a
+        single-type pool on a candidate the request explicitly filtered
+        out.  Both entry points therefore agree: there is no empty-pool
+        ``Recommendation``, only the raise.
+
+        Diagnostics: ``solve_time_s`` is the **whole-batch wall time** —
+        batch assembly through device read-back — stamped identically on
+        every request in the batch.  It is a batch-throughput figure, not a
+        per-request latency; divide by ``diagnostics["batch_size"]`` for a
+        per-request amortized cost.
+
         ``pad_to`` pads the batch axis so the serve layer can bound the set
         of compiled (B, K) shapes; padded rows are computed-and-discarded.
         ``archive`` is an optional :class:`repro.serve.DeviceArchive` whose
         device-resident arrays skip the per-call host->device transfer of
         the candidate set — and, under the tiled scoring stage, whose cached
-        per-candidate statistics skip the O(K*T) pass entirely.
+        per-candidate statistics skip the O(K*T) pass entirely.  A K-sharded
+        archive (``repro.shard``, ``is_sharded = True``) routes to the
+        per-shard pipeline instead of the single-device fused dispatch; its
+        pools are bit-identical to the single-device tiled path.
         """
         requests = list(requests)
         if not requests:
             return []
         t0 = time.perf_counter()
         batch = RequestBatch.from_requests(cands, requests, pad_to=pad_to)
+        # Defensive re-check of the empty-filter contract: from_requests
+        # raises per row, but the invariant is load-bearing enough (see the
+        # docstring) to hold against any future batch constructor too.
+        empty = ~batch.masks[:batch.n_valid].any(axis=1)
+        if empty.any():
+            raise ValueError("no candidates satisfy the request filters "
+                             f"(batch row {int(np.flatnonzero(empty)[0])})")
         impl = pool_lib.resolve_pool_impl(self.pool_impl, len(cands))
+        if archive is not None and getattr(archive, "is_sharded", False):
+            from .. import shard as shard_lib
+            uniq_masks, uniq_inv = _dedup_masks(batch.masks)
+            comb, avail, cost, order, counts, k_stop = (
+                shard_lib.sharded_batch_arrays(
+                    archive, batch.masks, batch.use_cpus, batch.weights,
+                    batch.lams, batch.amounts, uniq_masks, uniq_inv,
+                    pool_impl=impl))
+            return self._build_recommendations(
+                cands, batch, requests, comb, avail, cost, order, counts,
+                k_stop, time.perf_counter() - t0)
         s_impl = scoring.resolve_score_impl(self.score_impl, len(cands))
         if (s_impl == "dense" and archive is not None
                 and not getattr(archive, "dense_capable", True)):
@@ -279,8 +322,21 @@ class RecommendationEngine:
                 t3, prices, vcpus, memory_gb, batch.masks, batch.use_cpus,
                 batch.weights, batch.lams, batch.amounts, stats, uniq_masks,
                 uniq_inv, pool_impl=impl, score_impl=s_impl))
-        solve_time = time.perf_counter() - t0
+        return self._build_recommendations(
+            cands, batch, requests, comb, avail, cost, order, counts, k_stop,
+            time.perf_counter() - t0)
 
+    def _build_recommendations(self, cands: CandidateSet, batch: RequestBatch,
+                               requests, comb, avail, cost, order, counts,
+                               k_stop, solve_time: float) -> list[Recommendation]:
+        """Materialise :class:`Recommendation`\\ s from the batched arrays.
+
+        Shared tail of the single-device fused dispatch and the sharded
+        pipeline — both hand in (B, K) host score rows plus the vmapped
+        Algorithm 1 outputs, and this loop applies the ``max_types`` cap,
+        exact float64 hourly-cost accounting, and the diagnostics contract
+        (``solve_time_s`` is the whole-batch wall time on every row).
+        """
         recs = []
         for b, req in enumerate(requests):
             sel = counts[b] > 0
@@ -294,6 +350,8 @@ class RecommendationEngine:
             # Match the sequential path's iteration count: a stop at the first
             # padded lane is the gathered scan running out of candidates, which
             # greedy_pool_vectorized reports as argmax-of-all-false == 0 -> 1.
+            # (n_real == 0 cannot reach here — recommend_batch raises on
+            # all-masked rows before dispatch, see the empty-filter contract.)
             iters = int(k_stop[b]) + 1 if int(k_stop[b]) < n_real else 1
             recs.append(Recommendation(
                 names=cands.names[idx], regions=cands.regions[idx],

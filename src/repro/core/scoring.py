@@ -87,7 +87,9 @@ def _regression_slopes(t3: jax.Array) -> jax.Array:
     # and sum(t_c^2) vanish — the slope is 0 by convention, not 0/0 = NaN.
     denom = jnp.where(denom > 0, denom, 1.0)
     y_c = t3 - jnp.mean(t3, axis=-1, keepdims=True)
-    return (y_c @ t_c) / denom
+    # explicit multiply + last-axis sum, not ``@``: see candidate_stats'
+    # row-sliceability contract (gemv row-tiling is not row-independent)
+    return jnp.sum(y_c * t_c, axis=-1) / denom
 
 
 class CandidateStats(NamedTuple):
@@ -113,11 +115,22 @@ def candidate_stats(t3: jax.Array) -> CandidateStats:
     Float op order is shared with :func:`availability_scores` (both call this
     helper's exact expressions), which is what lets the streaming kernel's
     outputs agree with the gathered oracle on valid lanes.
+
+    Row-sliceability contract: every reduction here is an explicit
+    elementwise multiply + last-axis ``jnp.sum`` (or ``jnp.std``), **not** a
+    matrix-vector ``@`` — XLA's gemv tiles the row axis, so a row's dot
+    product can come out a ulp different depending on how many rows sit
+    around it, while last-axis reductions are row-independent.  The
+    K-sharded archive layer (``repro.shard``) computes these statistics per
+    row-slice and requires them to equal the full-axis pass bit for bit;
+    ``tests/test_shard.py::test_candidate_stats_rows_are_shard_sliceable``
+    pins the property.
     """
     t3 = jnp.asarray(t3, jnp.float32)
     # Trapezoid area over a uniform grid == mean of interior-weighted samples.
     w = jnp.ones(t3.shape[-1], jnp.float32).at[0].set(0.5).at[-1].set(0.5)
-    return CandidateStats(t3 @ w, _regression_slopes(t3), jnp.std(t3, axis=-1))
+    area = jnp.sum(t3 * w, axis=-1)
+    return CandidateStats(area, _regression_slopes(t3), jnp.std(t3, axis=-1))
 
 
 def stats_from_moments(s0: jax.Array, s1: jax.Array, q: jax.Array,

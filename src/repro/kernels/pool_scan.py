@@ -39,6 +39,17 @@ Two implementations share that schedule:
 Both return ``(counts_sorted, k_stop, any_term)`` with semantics identical
 to the dense scan, so ``core.pool`` can switch implementations behind
 ``pool_impl`` without perturbing any caller.
+
+K-axis sharding note (``repro.shard``): unlike the scoring stage's phase-0
+carries (min/max — associative, rounding-free, mergeable across shards bit
+for bit), this scan's carry rides on ``cumsum`` over the *score-descending*
+order, which (a) interleaves shards arbitrarily and (b) is float addition —
+not associative — so per-shard prefix sums plus an exclusive-scan offset
+over shard totals would change the summation order and break the
+bit-identical-pool contract every parity suite enforces.  The sharded serve
+path therefore gathers the per-shard score rows (O(B·K) scalars — nothing
+(K, T)-sized moves) onto one merge device and runs this same scan there on
+the same bits; see ``repro.shard.compute`` for the full argument.
 """
 from __future__ import annotations
 

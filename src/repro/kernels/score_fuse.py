@@ -38,6 +38,17 @@ on the request scalars — so the engine deduplicates identical filter masks
 across a batch (``stat_extrema`` once per *unique* mask) and passes the
 bounds in; the kernel then only streams the masked C_min in phase 0.  A
 batch of filterless requests collapses to a single extrema scan.
+
+``cost_floor``: the same exposure for the remaining phase-0 scalar.  Every
+carry this kernel accumulates — three stat minima, three maxima, the masked
+C_min — is an associative min/max reduction, so a candidate axis split into
+S shards can run phase 0 per shard and merge the seven scalars exactly
+(bitwise, not merely to tolerance).  The K-sharded serve path
+(``repro.shard``) does exactly that: :func:`stat_extrema` + :func:`cost_min`
+per shard, an elementwise min/max merge on the host, then per-shard phase-1
+emission via ``extrema=`` + ``cost_floor=`` — against merged scalars the
+emission is purely elementwise, so each shard's rows equal the
+corresponding slice of a single-device dispatch bit for bit.
 """
 from __future__ import annotations
 
@@ -133,9 +144,27 @@ def stat_extrema(area: jax.Array, slope: jax.Array, std: jax.Array,
     return lo, hi
 
 
+def cost_min(prices, vcpus, memory_gb, mask, use_cpus, required,
+             *, tile: int | None = None):
+    """Masked Eq. 2 C_min — the request-dependent half of the phase-0 carry.
+
+    Exposed for the K-sharded serve path (``repro.shard``): each shard takes
+    the masked min over its local candidates and the merge reduces across
+    shards.  Min is associative and rounding-free, so the merged scalar is
+    bitwise identical to the single-device masked min — which is what lets
+    phase 1 emit per shard (``cost_floor=``) without perturbing a bit.
+    Traceable under ``jit`` / ``vmap``; float32-pinned like the kernel.
+    """
+    del tile  # one-shot reduction; kept for signature symmetry
+    f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
+    total = _tile_total(f32(prices), f32(vcpus), f32(memory_gb),
+                        jnp.asarray(use_cpus), f32(required))
+    return _masked_min(total, jnp.asarray(mask))
+
+
 def _score_fuse_lax(area, slope, std, prices, vcpus, memory_gb, mask,
                     use_cpus, required, lam, weight, extrema=None,
-                    *, tile: int = DEFAULT_TILE):
+                    cost_floor=None, *, tile: int = DEFAULT_TILE):
     """Streamed scoring for one request: tiled stat scan, fused emission.
 
     Unlike the Pallas kernel, emission here is one fused full-width pass, so
@@ -148,7 +177,7 @@ def _score_fuse_lax(area, slope, std, prices, vcpus, memory_gb, mask,
     else:
         lo, hi = extrema
     total = _tile_total(prices, vcpus, memory_gb, use_cpus, required)
-    c_min = _masked_min(total, mask)
+    c_min = _masked_min(total, mask) if cost_floor is None else cost_floor
     return _emit_rows(area, slope, std, total, lo[0], hi[0], lo[1], hi[1],
                       lo[2], hi[2], c_min, lam, weight)
 
@@ -159,7 +188,7 @@ def _score_fuse_lax(area, slope, std, prices, vcpus, memory_gb, mask,
 
 def _score_fuse_kernel(params_ref, a_ref, m_ref, s_ref, p_ref, v_ref, g_ref,
                        k_ref, comb_ref, avail_ref, cost_ref, ext_scr,
-                       *, has_extrema: bool):
+                       *, has_extrema: bool, has_cost_floor: bool):
     p = pl.program_id(0)                                 # 0: extrema, 1: emit
     t = pl.program_id(1)
     use_cpus = params_ref[0, 0] > 0
@@ -169,17 +198,18 @@ def _score_fuse_kernel(params_ref, a_ref, m_ref, s_ref, p_ref, v_ref, g_ref,
 
     @pl.when((p == 0) & (t == 0))
     def _init():
-        # stat extrema slots: precomputed bounds, or +-inf scan sentinels
-        for i in range(6):
+        # stat extrema slots: precomputed bounds, or +-inf scan sentinels;
+        # C_min carry: precomputed floor, or the +inf scan sentinel
+        for i in range(7):
             ext_scr[i] = params_ref[0, 4 + i]
-        ext_scr[6] = jnp.asarray(jnp.inf, jnp.float32)   # C_min carry
 
     @pl.when(p == 0)
     def _extrema():
         mask_t = k_ref[0, :] > 0
-        total_t = _tile_total(p_ref[0, :], v_ref[0, :], g_ref[0, :],
-                              use_cpus, required)
-        ext_scr[6] = jnp.minimum(ext_scr[6], _masked_min(total_t, mask_t))
+        if not has_cost_floor:
+            total_t = _tile_total(p_ref[0, :], v_ref[0, :], g_ref[0, :],
+                                  use_cpus, required)
+            ext_scr[6] = jnp.minimum(ext_scr[6], _masked_min(total_t, mask_t))
         if not has_extrema:
             lo, hi = _tile_extrema(a_ref[0, :], m_ref[0, :], s_ref[0, :],
                                    mask_t)
@@ -202,26 +232,29 @@ def _score_fuse_kernel(params_ref, a_ref, m_ref, s_ref, p_ref, v_ref, g_ref,
 
 def _score_fuse_pallas(area, slope, std, prices, vcpus, memory_gb, mask,
                        use_cpus, required, lam, weight, extrema=None,
-                       *, tile: int = DEFAULT_TILE, interpret: bool = False):
+                       cost_floor=None, *, tile: int = DEFAULT_TILE,
+                       interpret: bool = False):
     K = area.shape[0]
     a_t, m_t, s_t, p_t, v_t, g_t, k_t, nt = _pad_tiles(
         (area, slope, std, prices, vcpus, memory_gb,
          mask.astype(jnp.float32)), tile, (0, 0, 0, 1, 1, 1, 0))
+    inf = jnp.asarray(jnp.inf, jnp.float32)
     if extrema is None:
-        inf = jnp.asarray(jnp.inf, jnp.float32)
         lo, hi = jnp.full(3, inf), jnp.full(3, -inf)
     else:
         lo, hi = extrema
+    floor = inf if cost_floor is None else jnp.asarray(cost_floor, jnp.float32)
     params = jnp.stack([
         jnp.where(use_cpus, 1.0, 0.0).astype(jnp.float32),
         jnp.asarray(required, jnp.float32), jnp.asarray(lam, jnp.float32),
         jnp.asarray(weight, jnp.float32),
-        lo[0], hi[0], lo[1], hi[1], lo[2], hi[2]]).reshape(1, 10)
+        lo[0], hi[0], lo[1], hi[1], lo[2], hi[2], floor]).reshape(1, 11)
     row_spec = pl.BlockSpec((1, tile), lambda p, t: (t, 0))
     comb, avail, cost = pl.pallas_call(
-        functools.partial(_score_fuse_kernel, has_extrema=extrema is not None),
+        functools.partial(_score_fuse_kernel, has_extrema=extrema is not None,
+                          has_cost_floor=cost_floor is not None),
         grid=(2, nt),
-        in_specs=[pl.BlockSpec((1, 10), lambda p, t: (0, 0),
+        in_specs=[pl.BlockSpec((1, 11), lambda p, t: (0, 0),
                                memory_space=pltpu.SMEM)] + [row_spec] * 7,
         out_specs=[row_spec] * 3,
         out_shape=[jax.ShapeDtypeStruct((nt, tile), jnp.float32)] * 3,
@@ -233,7 +266,8 @@ def _score_fuse_pallas(area, slope, std, prices, vcpus, memory_gb, mask,
 
 
 def score_fuse(area, slope, std, prices, vcpus, memory_gb, mask, use_cpus,
-               required, lam, weight, extrema=None, *, tile: int | None = None,
+               required, lam, weight, extrema=None, cost_floor=None,
+               *, tile: int | None = None,
                backend: str | None = None, interpret: bool | None = None):
     """Masked Eq. 2-4 for one request from per-candidate raw statistics.
 
@@ -246,7 +280,12 @@ def score_fuse(area, slope, std, prices, vcpus, memory_gb, mask, use_cpus,
     empty masks themselves.
     ``extrema=(lo, hi)`` short-circuits the stat half of phase 0 with
     precomputed masked bounds (see :func:`stat_extrema`); they must have been
-    taken over exactly this ``mask``.  ``backend=None`` picks the Pallas
+    taken over exactly this ``mask``.  ``cost_floor`` short-circuits the
+    remaining phase-0 scalar the same way: a precomputed masked C_min (see
+    :func:`cost_min`) used verbatim by the emission.  In the K-sharded path
+    it is the min-merge across shards, whose bounds may be *wider* than this
+    call's local mask — that is the point: every shard then emits against
+    the same global scalars.  ``backend=None`` picks the Pallas
     kernel on TPU and the ``lax.scan`` tiling elsewhere; ``interpret`` forces
     the Pallas interpreter (tests).  Pinned to float32 like the dense scoring
     path, including under ``jax_enable_x64``.  Traceable under ``jit``/``vmap``.
@@ -256,7 +295,8 @@ def score_fuse(area, slope, std, prices, vcpus, memory_gb, mask, use_cpus,
     args = (f32(area), f32(slope), f32(std), f32(prices), f32(vcpus),
             f32(memory_gb), jnp.asarray(mask), jnp.asarray(use_cpus),
             f32(required), f32(lam), f32(weight),
-            None if extrema is None else (f32(extrema[0]), f32(extrema[1])))
+            None if extrema is None else (f32(extrema[0]), f32(extrema[1])),
+            None if cost_floor is None else f32(cost_floor))
     if backend is None:
         backend = "pallas" if jax.default_backend() == "tpu" else "lax"
     if backend == "pallas":

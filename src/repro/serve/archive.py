@@ -39,9 +39,18 @@ class DeviceArchive:
     memory_gb: jax.Array
 
     @classmethod
-    def stage(cls, cands: CandidateSet, *, key: str | None = None) -> "DeviceArchive":
-        """Put a candidate set's numeric arrays on device."""
-        put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32))  # noqa: E731
+    def stage(cls, cands: CandidateSet, *, key: str | None = None,
+              device=None) -> "DeviceArchive":
+        """Put a candidate set's numeric arrays on device.
+
+        ``device`` pins the arrays (and therefore every computation that
+        consumes them, including the lazily-memoised ``score_stats``) to a
+        specific :func:`jax.devices` entry — the K-sharded archive layer
+        (``repro.shard``) stages one slice per device this way.  ``None``
+        keeps the default-device behavior.
+        """
+        put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32),  # noqa: E731
+                                       device)
         return cls(
             key=key if key is not None else cands.fingerprint(),
             host=cands,

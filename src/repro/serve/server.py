@@ -24,6 +24,7 @@ splitting the K axis to fit the B x K x K buffer.  Override with the
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 from ..core.engine import RecommendationEngine
@@ -35,7 +36,12 @@ DEFAULT_BUCKETS = (1, 8, 64, 256)
 
 @dataclass
 class ServeStats:
-    """Counters accumulated across ``serve`` calls."""
+    """Counters accumulated across ``serve`` calls.
+
+    ``BatchServer`` mutates these under its stats lock: ``serve_archive``
+    is reached concurrently by the admission worker thread and direct
+    callers, and unsynchronized ``+=`` on the counters would drop updates.
+    """
 
     requests: int = 0
     batches: int = 0
@@ -86,6 +92,7 @@ class BatchServer:
         self.bucket_sizes = tuple(sorted(set(bucket_sizes)))
         self.cache = ArchiveCache(capacity=cache_capacity)
         self.stats = ServeStats()
+        self._stats_lock = threading.Lock()
 
     def plan_chunks(self, n: int) -> list[tuple[int, int]]:
         """Split ``n`` requests into ``(chunk_len, bucket)`` pieces.
@@ -129,8 +136,11 @@ class BatchServer:
         collector tick, so routing it through ``cache.get`` would re-hash
         and re-stage; the ingestor manages cache membership itself via
         ``put``/``invalidate`` and drains hand the archive straight here.
-        Bucketing, padding, and stats accounting are identical to
-        :meth:`serve`.
+        K-sharded archives (``repro.shard``) come through here too — the
+        engine routes any archive with ``is_sharded = True`` to the
+        per-shard pipeline, so sharding is invisible to the serve layer
+        beyond the staging step.  Bucketing, padding, and stats accounting
+        are identical to :meth:`serve`.
         """
         requests = list(requests)
         if not requests:
@@ -142,5 +152,6 @@ class BatchServer:
             pos += chunk_len
             out.extend(self.engine.recommend_batch(
                 archive.host, chunk, pad_to=bucket, archive=archive))
-            self.stats.record(chunk_len, bucket)
+            with self._stats_lock:
+                self.stats.record(chunk_len, bucket)
         return out

@@ -1,0 +1,21 @@
+"""K-axis sharding of the candidate archive across devices/hosts.
+
+Splits the (instance type, AZ) candidate axis into contiguous per-device
+shards — window slices, catalog columns, and per-candidate statistics —
+and runs the batched recommendation pipeline as per-shard phase-0 carries,
+an exact (associative min/max) scalar merge, per-shard row emission, and a
+merge-device Algorithm 1 scan.  Pools are bit-identical to the
+single-device tiled path; see :mod:`repro.shard.compute` for the argument
+and :mod:`repro.shard.archive` for the storage layer.
+"""
+from .archive import (ShardedArchive, ShardedRollingArchive, ShardedSnapshot,
+                      shard_bounds)
+from .compute import sharded_batch_arrays
+
+__all__ = [
+    "ShardedArchive",
+    "ShardedRollingArchive",
+    "ShardedSnapshot",
+    "shard_bounds",
+    "sharded_batch_arrays",
+]

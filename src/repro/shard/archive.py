@@ -1,0 +1,286 @@
+"""K-axis sharded candidate archives: one device-resident slice per shard.
+
+The paper's candidate pool is every (instance type, AZ) pair across regions
+— a SpotLake-scale archive whose (K, T) window outgrows a single device
+before the request rate does.  Everything downstream of staging is already
+an O(K) stream with mergeable carries (pool scan, streaming scoring, rank-1
+stats updates), so the archive itself is the last single-device structure:
+this module splits the candidate axis into contiguous ``[start, end)``
+shards and stages each slice — window, catalog columns, per-candidate
+statistics — on its own device.
+
+Two layers, mirroring the single-device pair:
+
+- :class:`ShardedArchive`         : immutable snapshot slices, one
+                                    :class:`~repro.serve.DeviceArchive` per
+                                    shard (object-store archives).
+- :class:`ShardedRollingArchive`  : one
+                                    :class:`~repro.stream.RollingDeviceArchive`
+                                    ring per shard; a collector tick splits
+                                    its (K,) column by the same bounds and
+                                    appends every slice under a **single**
+                                    version bump, so the versioned cache key
+                                    still identifies one coherent window.
+- :class:`ShardedSnapshot`        : the version-pinned view a drain holds
+                                    across ticks (per-shard
+                                    :class:`~repro.stream.ArchiveSnapshot`
+                                    pieces under one key).
+
+Shards are *contiguous* slices of the candidate axis, so concatenating
+per-shard rows restores the global candidate order exactly — local winner
+indices map back to global candidate ids by adding the shard's ``start``
+offset, and a stable global argsort over concatenated scores ties off
+identically to the single-device sort.  The compute that runs against these
+archives lives in :mod:`repro.shard.compute`; the engine routes any archive
+with ``is_sharded = True`` there.
+
+Like :class:`~repro.stream.ArchiveSnapshot`, sharded archives carry no
+single-device window matrix (that is the point), so they serve the tiled
+scoring stage only (``dense_capable = False``).
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.types import CandidateSet
+from ..serve.archive import DeviceArchive
+from ..stream.rolling import ArchiveSnapshot, RollingDeviceArchive
+
+
+def shard_bounds(k: int, n_shards: int) -> tuple[tuple[int, int], ...]:
+    """Contiguous, balanced ``[start, end)`` slices of a K-candidate axis.
+
+    The first ``k % n_shards`` shards take one extra candidate, so shard
+    sizes differ by at most one — at most two distinct (B, K_shard) compile
+    shapes per batch shape.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n_shards > k:
+        raise ValueError(
+            f"n_shards {n_shards} > {k} candidates (empty shards have no "
+            f"masked extrema to merge)")
+    base, rem = divmod(k, n_shards)
+    bounds, start = [], 0
+    for i in range(n_shards):
+        end = start + base + (1 if i < rem else 0)
+        bounds.append((start, end))
+        start = end
+    return tuple(bounds)
+
+
+def _plan(k: int, n_shards: int | None, devices):
+    """Resolve ``(bounds, device-per-shard)`` for a K-candidate axis."""
+    devices = tuple(jax.devices()) if devices is None else tuple(devices)
+    n = len(devices) if n_shards is None else int(n_shards)
+    n = min(n, k) if n_shards is None else n
+    bounds = shard_bounds(k, n)
+    return bounds, tuple(devices[i % len(devices)] for i in range(n))
+
+
+def _stage_full_columns(cands: CandidateSet, device=None):
+    """Full-width catalog columns on the merge device (pool stage operands)."""
+    put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32),  # noqa: E731
+                                   device)
+    return put(cands.prices), put(cands.vcpus), put(cands.memory_gb)
+
+
+class _ShardedSurface:
+    """The shared engine-facing surface of every K-sharded archive class.
+
+    ``is_sharded`` routes the engine to the per-shard pipeline;
+    ``dense_capable = False`` keeps the scoring stage tiled (there is no
+    single-device window matrix to re-reduce — accessing ``t3`` raises).
+    ``nbytes`` counts every shard *plus* the full-width merge-device catalog
+    columns, in one place so the three classes' cache-budget accounting can
+    never drift apart.
+    """
+
+    is_sharded = True
+    dense_capable = False
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def t3(self):
+        raise RuntimeError(
+            f"{type(self).__name__} holds no single-device window matrix: "
+            "the (K, T) slices live one-per-shard (tiled scoring stage "
+            "only; see repro.shard.compute).")
+
+    @property
+    def nbytes(self) -> int:
+        return (sum(s.nbytes for s in self.shards)
+                + sum(int(a.nbytes) for a in
+                      (self.prices, self.vcpus, self.memory_gb)))
+
+    def __len__(self) -> int:
+        return len(self.host)
+
+
+@dataclass(frozen=True)
+class ShardedArchive(_ShardedSurface):
+    """An immutable candidate archive split along K across devices.
+
+    ``shards[i]`` is a :class:`~repro.serve.DeviceArchive` of the host rows
+    ``bounds[i] = [start, end)``, staged (window, catalog columns, and the
+    lazily-memoised per-shard ``score_stats``) on its own device.  ``prices``
+    / ``vcpus`` / ``memory_gb`` are the *full-width* catalog columns on the
+    merge (default) device — the O(K) operands of the pool stage, which runs
+    there over gathered score rows (see ``repro.shard.compute`` for why the
+    prefix-sum scan cannot itself be sharded without breaking the
+    bit-identical-pool contract).  ``host`` keeps the full
+    :class:`CandidateSet` for filter masks and result materialisation.
+    """
+
+    key: str
+    host: CandidateSet
+    bounds: tuple[tuple[int, int], ...]
+    shards: tuple[DeviceArchive, ...]
+    prices: jax.Array
+    vcpus: jax.Array
+    memory_gb: jax.Array
+
+    @classmethod
+    def stage(cls, cands: CandidateSet, *, n_shards: int | None = None,
+              devices=None, key: str | None = None) -> "ShardedArchive":
+        """Split ``cands`` into shards and stage one slice per device.
+
+        ``devices`` defaults to :func:`jax.devices` and ``n_shards`` to its
+        length (capped at K); shards round-robin over the device list when
+        ``n_shards`` exceeds it, which keeps the layer testable on a
+        single-device host (parity is a property of the math, not the
+        device count).
+        """
+        bounds, devs = _plan(len(cands), n_shards, devices)
+        key = key if key is not None else cands.fingerprint()
+        shards = tuple(
+            DeviceArchive.stage(cands.take(np.arange(a, b)),
+                                key=f"{key}/s{i}", device=dev)
+            for i, ((a, b), dev) in enumerate(zip(bounds, devs)))
+        prices, vcpus, memory_gb = _stage_full_columns(cands)
+        return cls(key=key, host=cands, bounds=bounds, shards=shards,
+                   prices=prices, vcpus=vcpus, memory_gb=memory_gb)
+
+
+@dataclass(frozen=True)
+class ShardedSnapshot(_ShardedSurface):
+    """Version-pinned view of a :class:`ShardedRollingArchive`.
+
+    One :class:`~repro.stream.ArchiveSnapshot` per shard under a single key
+    /version — what the admission queue hands a drain, so a collector tick
+    landing mid-drain can never mix two windows *or* two shard versions
+    inside one batch.  The full-width catalog columns are shared with the
+    parent (catalog columns are never donated, so they stay valid across
+    the parent's future ticks).
+    """
+
+    key: str
+    version: int
+    host: CandidateSet
+    bounds: tuple[tuple[int, int], ...]
+    shards: tuple[ArchiveSnapshot, ...]
+    prices: jax.Array
+    vcpus: jax.Array
+    memory_gb: jax.Array
+    window_len: int
+
+
+class ShardedRollingArchive(_ShardedSurface):
+    """A live candidate archive sharded along K: one ring per device.
+
+    Drop-in for :class:`~repro.stream.RollingDeviceArchive` everywhere the
+    serve/stream layers look (``key`` / ``host`` / ``append`` / ``snapshot``
+    / ``materialize`` / ``window_len`` / ``nbytes`` / ``version``), with the
+    same versioned-key contract: **one** version bump per collector tick
+    across all shards, so the :class:`~repro.serve.ArchiveCache` still sees
+    a single coherent entry per window.  Each shard's ring absorbs its slice
+    of the tick column via the same donated in-place append + O(K) rank-1
+    stats update as the single-device ring — per-candidate moment updates
+    are elementwise along K, so a row-sliced update is bitwise identical to
+    the corresponding rows of a full-width one.
+    """
+
+    is_sharded = True
+    dense_capable = False
+
+    def __init__(self, cands: CandidateSet, *, capacity: int | None = None,
+                 name: str | None = None, n_shards: int | None = None,
+                 devices=None):
+        bounds, devs = _plan(len(cands), n_shards, devices)
+        self.host = cands
+        self.name = name if name is not None else cands.fingerprint()
+        self.bounds = bounds
+        self.shards = tuple(
+            RollingDeviceArchive(cands.take(np.arange(a, b)),
+                                 capacity=capacity, name=f"{self.name}/s{i}",
+                                 device=dev)
+            for i, ((a, b), dev) in enumerate(zip(bounds, devs)))
+        self.prices, self.vcpus, self.memory_gb = _stage_full_columns(cands)
+        self.version = 0
+        self.appends = 0
+        # Serializes append against snapshot: a tick appends shard slices
+        # one by one before the shared version bump, and the admission
+        # worker snapshots from its own thread — an unguarded snapshot
+        # landing between two per-shard appends would pin shard 0 at tick
+        # N+1 and shard 1 at tick N under one key, exactly the mixed-window
+        # batch the version pinning exists to prevent.
+        self._tick_lock = threading.Lock()
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def key(self) -> str:
+        """Versioned fingerprint: one bump per tick across all shards."""
+        return f"{self.name}@v{self.version}"
+
+    @property
+    def window_len(self) -> int:
+        return self.shards[0].window_len
+
+    # -- streaming ---------------------------------------------------------
+
+    def append(self, column) -> "ShardedRollingArchive":
+        """Absorb one collector tick: split the (K,) column by the shard
+        bounds, append every slice, bump the shared version once.  Atomic
+        with respect to :meth:`snapshot` (see ``_tick_lock``)."""
+        col = np.asarray(column, np.float32)
+        if col.shape != (len(self.host),):
+            raise ValueError(
+                f"column shape {col.shape} != ({len(self.host)},)")
+        with self._tick_lock:
+            for (a, b), shard in zip(self.bounds, self.shards):
+                shard.append(col[a:b])
+            self.version += 1
+            self.appends += 1
+        return self
+
+    def snapshot(self) -> ShardedSnapshot:
+        """Pin the current version for an in-flight batch (all shards).
+
+        Taken under the tick lock, so every per-shard snapshot inside the
+        result belongs to the same collector tick as the stamped version —
+        a concurrent ``append`` either completes first or waits.
+        """
+        with self._tick_lock:
+            return ShardedSnapshot(
+                key=self.key, version=self.version, host=self.host,
+                bounds=self.bounds,
+                shards=tuple(s.snapshot() for s in self.shards),
+                prices=self.prices, vcpus=self.vcpus,
+                memory_gb=self.memory_gb, window_len=self.window_len)
+
+    # -- parity/debug surface ----------------------------------------------
+
+    def materialize(self) -> np.ndarray:
+        """Host copy of the full logical window (parity tests, re-staging)."""
+        with self._tick_lock:
+            return np.concatenate([s.materialize() for s in self.shards],
+                                  axis=0)

@@ -1,0 +1,138 @@
+"""The sharded batched-recommendation pipeline: per-shard phase-0 carries,
+an exact scalar merge, per-shard row emission, and a merge-device pool scan.
+
+For B masked requests over a K-candidate axis split into contiguous shards
+(:mod:`repro.shard.archive`), one ``recommend_batch`` dispatch becomes:
+
+  phase 0 (per shard, on the shard's device)
+      masked min/max of the three Eq. 3 statistics per *unique* filter mask
+      (``score_fuse.stat_extrema``) and the masked Eq. 2 C_min per request
+      (``score_fuse.cost_min``) — seven scalars of carry per (mask|request),
+      identical to the single-device streaming kernel's phase 0 over one
+      tile range.
+
+  merge (host)
+      elementwise ``min``/``max`` across shards.  Min/max are associative
+      and rounding-free, so the merged scalars are **bitwise identical** to
+      a single-device masked reduction over the full axis — this is the
+      property the whole layer leans on.
+
+  phase 1 (per shard, on the shard's device)
+      ``score_fuse(..., extrema=merged, cost_floor=merged)``: the emission
+      is purely elementwise given the merged scalars, so each shard's
+      (B, K_shard) combined/availability/cost rows equal the corresponding
+      slice of a single-device emission bit for bit.
+
+  pool (merge device)
+      the per-shard score rows are gathered (O(B·K) scalars — catalog-column
+      sized, nothing (K, T)-shaped ever moves) and concatenated in bounds
+      order, which restores the global candidate axis exactly; then the
+      same vmapped ``greedy_pool_masked`` scan the single-device engine runs
+      executes on the same bits, so pools — members, order, counts,
+      ``k_stop`` — are bit-identical by construction.
+
+Why the pool scan is *not* sharded: Algorithm 1's termination statistics
+ride on ``cumsum`` over the score-descending order, which interleaves
+shards arbitrarily, and float addition is not associative — per-shard
+prefix sums plus an exclusive-scan offset over shard totals would change
+the summation order and silently break the bit-identical-pool contract the
+parity suites enforce.  Gathering O(B·K) score scalars to one device is the
+cheapest operation that preserves it; the (K, T) windows and the O(K·T)
+statistics passes — the actual single-device ceiling — stay sharded.
+
+Per-shard dispatches are issued back-to-back before any result is read, so
+on a multi-device host the shards' phase-0/phase-1 programs overlap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import pool as pool_lib
+from ..kernels import score_fuse as score_fuse_lib
+
+
+@jax.jit
+def _shard_phase0(area, slope, std, prices, vcpus, memory_gb,
+                  uniq_masks, masks, use_cpus, amounts):
+    """One shard's phase-0 carries: (U, 3) stat extrema + (B,) masked C_min."""
+    lo, hi = jax.vmap(
+        lambda m: score_fuse_lib.stat_extrema(area, slope, std, m)
+    )(uniq_masks)
+    c_min = jax.vmap(
+        lambda m, uc, amt: score_fuse_lib.cost_min(
+            prices, vcpus, memory_gb, m, uc, amt)
+    )(masks, use_cpus, amounts)
+    return lo, hi, c_min
+
+
+@jax.jit
+def _shard_phase1(area, slope, std, prices, vcpus, memory_gb, masks,
+                  use_cpus, amounts, lams, weights, lo_b, hi_b, c_min):
+    """One shard's (B, K_shard) row emission against merged scalars."""
+    return jax.vmap(
+        lambda m, uc, amt, lam, wt, lo, hi, cm: score_fuse_lib.score_fuse(
+            area, slope, std, prices, vcpus, memory_gb, m, uc, amt, lam, wt,
+            extrema=(lo, hi), cost_floor=cm)
+    )(masks, use_cpus, amounts, lams, weights, lo_b, hi_b, c_min)
+
+
+@functools.partial(jax.jit, static_argnames=("pool_impl",))
+def _merged_pool_stage(comb, vcpus, memory_gb, masks, use_cpus, amounts,
+                       *, pool_impl: str):
+    """Algorithm 1 over the gathered global score rows (merge device).
+
+    The caps staging mirrors ``engine._fused_recommend_batch`` op-for-op so
+    the scan consumes the same float32 bits the single-device path would.
+    """
+    caps = jnp.where(use_cpus[:, None], vcpus[None, :],
+                     memory_gb[None, :]).astype(jnp.float32)       # (B, K)
+    return jax.vmap(
+        functools.partial(pool_lib.greedy_pool_masked, impl=pool_impl)
+    )(comb, caps, amounts, masks)
+
+
+def sharded_batch_arrays(archive, masks, use_cpus, weights, lams, amounts,
+                         uniq_masks, uniq_inv, *, pool_impl: str):
+    """Run the sharded scoring + pool pipeline for one request batch.
+
+    ``archive`` is any K-sharded archive (``is_sharded = True``): it
+    supplies per-shard statistics/catalog slices (``archive.shards``, each
+    with ``score_stats()``), the shard ``bounds``, and full-width catalog
+    columns on the merge device.  Returns host arrays
+    ``(comb, avail, cost, order, counts, k_stop)`` with exactly the
+    single-device fused dispatch's semantics (and, for the pool outputs,
+    its exact bits).
+    """
+    shard_inputs = []
+    phase0 = []
+    for (a, b), shard in zip(archive.bounds, archive.shards):
+        stats = shard.score_stats()
+        inp = (stats.area, stats.slope, stats.std, shard.prices,
+               shard.vcpus, shard.memory_gb)
+        shard_inputs.append(inp)
+        phase0.append(_shard_phase0(*inp, uniq_masks[:, a:b], masks[:, a:b],
+                                    use_cpus, amounts))
+    # exact merge: min/max are associative, so these equal the full-axis
+    # masked reductions bit for bit
+    lo = np.minimum.reduce([np.asarray(p[0]) for p in phase0])
+    hi = np.maximum.reduce([np.asarray(p[1]) for p in phase0])
+    c_min = np.minimum.reduce([np.asarray(p[2]) for p in phase0])
+    lo_b, hi_b = lo[uniq_inv], hi[uniq_inv]
+
+    emitted = [
+        _shard_phase1(*inp, masks[:, a:b], use_cpus, amounts, lams, weights,
+                      lo_b, hi_b, c_min)
+        for (a, b), inp in zip(archive.bounds, shard_inputs)]
+    # gather: contiguous bounds -> concatenation restores the global axis
+    comb, avail, cost = (
+        np.concatenate([np.asarray(e[i]) for e in emitted], axis=1)
+        for i in range(3))
+
+    order, counts, k_stop, _ = jax.device_get(_merged_pool_stage(
+        comb, archive.vcpus, archive.memory_gb, masks, use_cpus, amounts,
+        pool_impl=pool_impl))
+    return comb, avail, cost, order, counts, k_stop

@@ -75,18 +75,32 @@ class Ticket:
 
 @dataclass
 class AdmissionStats:
-    """Counters accumulated across drains."""
+    """Counters accumulated across drains.
+
+    Mutated only under the queue's lock (``submit`` and the tail of
+    ``drain`` both hold it), so concurrent submitters, the worker thread,
+    and direct ``drain`` callers never lose an increment.
+    """
 
     submitted: int = 0
     served: int = 0
     drains: int = 0
-    coalesced: int = 0          # served before their own deadline came due
+    forced_drains: int = 0      # force=True (shutdown / sync Ticket.result)
+    coalesced: int = 0          # rode a *due* drain before their own deadline
     versions: dict = field(default_factory=dict)   # archive key -> #requests
 
-    def record_drain(self, n: int, n_early: int, key: str) -> None:
+    def record_drain(self, n: int, n_early: int, key: str,
+                     forced: bool = False) -> None:
         self.drains += 1
         self.served += n
-        self.coalesced += n_early
+        if forced:
+            # A forced drain takes everything by definition — counting its
+            # not-yet-due tickets as "coalesced" would credit the arrival
+            # batching for work the force carve-out did (the sync
+            # Ticket.result fallback used to inflate the counter this way).
+            self.forced_drains += 1
+        else:
+            self.coalesced += n_early
         self.versions[key] = self.versions.get(key, 0) + n
 
 
@@ -109,6 +123,8 @@ class AdmissionQueue:
     max_pending : int, optional
         Queue length that triggers an immediate drain (default: the
         server's largest bucket — a full batch gains nothing by waiting).
+        Must be >= 1: a threshold of 0 would make every pump/loop pass
+        "due" with an empty queue and busy-drain nothing forever.
     clock : callable
         Monotonic time source (tests inject a fake).
     """
@@ -118,6 +134,8 @@ class AdmissionQueue:
                  max_pending: int | None = None, clock=time.monotonic):
         if max_wait_s < 0:
             raise ValueError("max_wait_s must be >= 0")
+        if max_pending is not None and max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
         self.server = server
         self._source = archive_source
         self.max_wait_s = max_wait_s
@@ -205,7 +223,8 @@ class AdmissionQueue:
             if version is not None:
                 rec.diagnostics["archive_version"] = version
             t._resolve(result=rec)
-        self.stats.record_drain(len(batch), n_early, key)
+        with self._lock:        # stats share the drain lock (see AdmissionStats)
+            self.stats.record_drain(len(batch), n_early, key, forced=force)
         return len(batch)
 
     # -- background operation ---------------------------------------------

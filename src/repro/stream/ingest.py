@@ -33,17 +33,30 @@ class LiveIngestor:
     name : str, optional
         Stable archive identity used in the versioned keys (defaults to the
         staged window's content fingerprint).
+    shards : int, optional
+        When set (or when ``devices`` is given), :meth:`prime` stages a
+        K-sharded rolling archive (``repro.shard.ShardedRollingArchive``)
+        instead of a single-device ring: one ring per device, every tick
+        split across the shards under one version bump.  The rest of the
+        loop — cache membership, versioned keys, ``poll`` — is unchanged.
+    devices : sequence, optional
+        Explicit device list for the shards (default: ``jax.devices()``).
     """
 
     def __init__(self, collector: DataCollector, *, window: int,
-                 cache: ArchiveCache | None = None, name: str | None = None):
+                 cache: ArchiveCache | None = None, name: str | None = None,
+                 shards: int | None = None, devices=None):
         if window < 1:
             raise ValueError("window must be >= 1")
+        if shards is not None and shards < 1:
+            raise ValueError("shards must be >= 1")
         self.collector = collector
         self.window = window
         self.cache = cache
         self._name = name
-        self.archive: RollingDeviceArchive | None = None
+        self._shards = shards
+        self._devices = devices
+        self.archive = None   # RollingDeviceArchive | ShardedRollingArchive
         self._ingested = 0                    # collector ticks absorbed
 
     def prime(self) -> RollingDeviceArchive:
@@ -57,8 +70,14 @@ class LiveIngestor:
             raise ValueError("collector has no completed ticks to stage")
         old_key = self.archive.key if self.archive is not None else None
         cands = self.collector.to_candidate_set(window=self.window)
-        self.archive = RollingDeviceArchive(cands, capacity=self.window,
-                                            name=self._name)
+        if self._shards is not None or self._devices is not None:
+            from ..shard import ShardedRollingArchive
+            self.archive = ShardedRollingArchive(
+                cands, capacity=self.window, name=self._name,
+                n_shards=self._shards, devices=self._devices)
+        else:
+            self.archive = RollingDeviceArchive(cands, capacity=self.window,
+                                                name=self._name)
         self._ingested = self.collector.ticks
         if self.cache is not None:
             if old_key is not None:

@@ -139,7 +139,7 @@ class RollingDeviceArchive:
     """
 
     def __init__(self, cands: CandidateSet, *, capacity: int | None = None,
-                 name: str | None = None):
+                 name: str | None = None, device=None):
         t3 = np.asarray(cands.t3, np.float64)
         K, T = t3.shape
         capacity = T if capacity is None else int(capacity)
@@ -148,7 +148,11 @@ class RollingDeviceArchive:
         self.host = cands
         self.name = name if name is not None else cands.fingerprint()
         self.capacity = capacity
-        put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32))  # noqa: E731
+        # ``device`` pins the ring + catalog columns (and the donated append
+        # dispatches that consume them) to one jax device — the K-sharded
+        # rolling archive stages one slice per device this way.
+        put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32),  # noqa: E731
+                                       device)
         self.prices = put(cands.prices)
         self.vcpus = put(cands.vcpus)
         self.memory_gb = put(cands.memory_gb)
@@ -159,7 +163,11 @@ class RollingDeviceArchive:
         self._pos = T % capacity
         self._len = T
         self.version = 0
-        self._moments = stats_update_lib.moments_from_window(t3)
+        moments = stats_update_lib.moments_from_window(t3)
+        # colocate the accumulators with the ring: the donated append
+        # dispatch consumes both, and jit rejects split-device operands
+        self._moments = stats_update_lib.StreamMoments(
+            *(jax.device_put(m, device) for m in moments))
         self._stats: scoring.CandidateStats | None = None
         self._t3_logical = None
         self.appends = 0

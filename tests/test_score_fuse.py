@@ -104,6 +104,35 @@ def test_extrema_short_circuit_is_bitwise():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_cost_floor_short_circuit_is_bitwise():
+    """Phase 0 with a precomputed C_min (the sharded merge's carry) must
+    reproduce the in-kernel masked min bit for bit — and a sharded
+    min-merge of per-slice ``cost_min`` calls must equal the full-axis
+    scalar exactly (min is associative and rounding-free)."""
+    t3, prices, vcpus, mems = instance(9)
+    rng = np.random.default_rng(9)
+    mask = rng.random(KW) < 0.6
+    mask[0] = True
+    args = kernel_args(t3, prices, vcpus, mems, mask, True, 200.0, 0.15, 0.4)
+    floor = sf.cost_min(args[3], args[4], args[5], args[6], True, 200.0)
+    # per-slice mins merged == full-axis min, bitwise
+    cut = KW // 3
+    merged = np.minimum(
+        np.asarray(sf.cost_min(args[3][:cut], args[4][:cut], args[5][:cut],
+                               args[6][:cut], True, 200.0)),
+        np.asarray(sf.cost_min(args[3][cut:], args[4][cut:], args[5][cut:],
+                               args[6][cut:], True, 200.0)))
+    np.testing.assert_array_equal(np.asarray(floor), merged)
+    lo, hi = sf.stat_extrema(args[0], args[1], args[2], args[6], tile=TILE)
+    for backend, interpret in (("lax", None), ("pallas", True)):
+        full = sf.score_fuse(*args, tile=TILE, backend=backend,
+                             interpret=interpret)
+        short = sf.score_fuse(*args, extrema=(lo, hi), cost_floor=floor,
+                              tile=TILE, backend=backend, interpret=interpret)
+        for a, b in zip(full, short):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
 @pytest.mark.parametrize("k,seed", [(7, 0), (TILE, 1), (TILE + 5, 2),
                                     (2 * TILE, 3)])
 def test_pallas_interpret_matches_lax(k, seed):

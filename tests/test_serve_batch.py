@@ -155,8 +155,51 @@ def test_empty_filter_raises(cands, engine):
         engine.recommend_batch(cands, reqs)
 
 
+def test_empty_filter_contract_agrees_across_entry_points(cands, engine):
+    """Both entry points raise on a filter that matches nothing — there is
+    no silent empty-pool Recommendation from either path."""
+    req = ResourceRequest(cpus=8.0, regions=["nowhere-9"])
+    with pytest.raises(ValueError,
+                       match="no candidates satisfy the request filters"):
+        engine.recommend(cands, req)
+    with pytest.raises(ValueError,
+                       match="no candidates satisfy the request filters"):
+        engine.recommend_batch(cands, [req])
+    # inside a mixed batch the raise names the offending row
+    good = ResourceRequest(cpus=8.0)
+    with pytest.raises(ValueError, match="batch row 2"):
+        engine.recommend_batch(cands, [good, good, req, good])
+
+
+def test_all_masked_row_never_reaches_dispatch(cands, engine, monkeypatch):
+    """Defense in depth: even if a batch constructor leaks an all-masked
+    row, recommend_batch re-checks before dispatch — the masked Algorithm 1
+    scan would otherwise terminate degenerately at k = 0 and emit a
+    single-type pool on a candidate the request filtered out."""
+    real = RequestBatch.from_requests
+
+    def leaky(cands_, requests, pad_to=None):
+        rb = real(cands_, requests, pad_to=pad_to)
+        rb.masks[1] = False           # the row the constructor failed to reject
+        return rb
+
+    monkeypatch.setattr(RequestBatch, "from_requests", leaky)
+    reqs = [ResourceRequest(cpus=8.0)] * 3
+    with pytest.raises(ValueError, match="batch row 1"):
+        engine.recommend_batch(cands, reqs)
+
+
 def test_empty_batch(cands, engine):
     assert engine.recommend_batch(cands, []) == []
+
+
+def test_solve_time_is_whole_batch_wall_time(cands, engine):
+    """Documented diagnostics contract: solve_time_s is one wall-time
+    figure for the whole batch, stamped identically on every request."""
+    reqs = heterogeneous_requests(cands)[:4]
+    recs = engine.recommend_batch(cands, reqs)
+    assert len({r.diagnostics["solve_time_s"] for r in recs}) == 1
+    assert all(r.diagnostics["batch_size"] == 4 for r in recs)
 
 
 def test_request_batch_padding_shape(cands):

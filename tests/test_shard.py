@@ -1,0 +1,361 @@
+"""K-axis sharding (``repro.shard``): bit-identical pools across shard
+counts, devices, and rolling ticks.
+
+The load-bearing contract (ROADMAP "K-axis sharding", ISSUE 5): splitting
+the candidate axis across >= 2 and >= 4 shards must not perturb a single
+bit of any pool the single-device tiled path would recommend — members,
+order, counts, hourly cost, diagnostics — including after streamed
+collector ticks, where the sharded rolling archive must keep matching a
+cold re-stage of the full materialized window.  On a one-device host the
+shards round-robin onto the same device; the CI sharding lane re-runs this
+file under ``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so the
+same assertions also cover genuinely multi-device placement.
+
+The parity chain the layer leans on, each link pinned here:
+
+1. per-shard ``candidate_stats`` rows == row-slices of the full pass
+   (row-wise reductions are row-independent);
+2. phase-0 carries merge exactly (min/max are associative);
+3. phase-1 emission is elementwise against merged scalars;
+4. the pool scan runs on the gathered global rows — same op, same bits.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import RecommendationEngine, ResourceRequest, scoring
+from repro.serve import ArchiveCache, BatchServer, DeviceArchive
+from repro.shard import (ShardedArchive, ShardedRollingArchive,
+                         ShardedSnapshot, shard_bounds)
+from repro.stream import AdmissionQueue, LiveIngestor, RollingDeviceArchive
+
+from test_serve_batch import (assert_equivalent, heterogeneous_requests,
+                              synth_candidates)
+
+WINDOW = 10
+
+
+@pytest.fixture(scope="module")
+def cands():
+    return synth_candidates(seed=11, K=72)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    # tiled is what sharded archives serve (dense_capable = False); pin it
+    # on the baseline too so the comparison is exactly the contract's.
+    return RecommendationEngine(score_impl="tiled", pool_impl="tiled")
+
+
+def _assert_bitwise(a, b):
+    """Pools AND scores bit-identical (stronger than assert_equivalent)."""
+    assert list(a.names) == list(b.names)
+    assert list(a.regions) == list(b.regions)
+    assert list(a.azs) == list(b.azs)
+    np.testing.assert_array_equal(a.counts, b.counts)
+    assert a.hourly_cost == b.hourly_cost
+    assert (a.diagnostics["greedy_iterations"]
+            == b.diagnostics["greedy_iterations"])
+    np.testing.assert_array_equal(a.combined, b.combined)
+    np.testing.assert_array_equal(a.availability, b.availability)
+    np.testing.assert_array_equal(a.cost, b.cost)
+
+
+# ---------------------------------------------------------------------------
+# bounds + staging surface
+# ---------------------------------------------------------------------------
+
+def test_shard_bounds_contiguous_balanced():
+    for k, n in ((72, 1), (72, 2), (72, 4), (7, 3), (5, 5)):
+        bounds = shard_bounds(k, n)
+        assert bounds[0][0] == 0 and bounds[-1][1] == k
+        sizes = [b - a for a, b in bounds]
+        assert sum(sizes) == k and max(sizes) - min(sizes) <= 1
+        assert all(bounds[i][1] == bounds[i + 1][0]
+                   for i in range(len(bounds) - 1))
+    with pytest.raises(ValueError, match="n_shards"):
+        shard_bounds(4, 0)
+    with pytest.raises(ValueError, match="empty shards"):
+        shard_bounds(4, 5)
+
+
+def test_sharded_archive_surface(cands):
+    arch = ShardedArchive.stage(cands, n_shards=3, key="shardtest")
+    assert arch.n_shards == 3 and len(arch) == len(cands)
+    assert arch.key == "shardtest"
+    assert [s.key for s in arch.shards] == [f"shardtest/s{i}"
+                                            for i in range(3)]
+    assert arch.nbytes > 0
+    assert not arch.dense_capable and arch.is_sharded
+    with pytest.raises(RuntimeError, match="no single-device window"):
+        _ = arch.t3
+    # shard slices re-assemble the host exactly
+    got = np.concatenate([np.asarray(s.t3) for s in arch.shards], axis=0)
+    np.testing.assert_array_equal(got, np.asarray(cands.t3, np.float32))
+
+
+def test_candidate_stats_rows_are_shard_sliceable(cands):
+    """Link 1 of the parity chain: per-shard Eq. 3 statistics must equal
+    row-slices of the full-axis pass bit for bit — the whole layer's
+    bit-identical claim rests on the row-wise reductions being
+    row-independent."""
+    full = scoring.candidate_stats(jnp.asarray(cands.t3, jnp.float32))
+    for a, b in shard_bounds(len(cands), 4):
+        part = scoring.candidate_stats(
+            jnp.asarray(cands.t3[a:b], jnp.float32))
+        for name, f, p in zip(("area", "slope", "std"), full, part):
+            np.testing.assert_array_equal(np.asarray(f)[a:b], np.asarray(p),
+                                          err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# snapshot archives: sharded == single-device tiled, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_pools_bit_identical_to_single_device(cands, engine, n_shards):
+    reqs = heterogeneous_requests(cands)
+    single = engine.recommend_batch(cands, reqs,
+                                    archive=DeviceArchive.stage(cands))
+    sharded = engine.recommend_batch(
+        cands, reqs, archive=ShardedArchive.stage(cands, n_shards=n_shards))
+    for a, b in zip(single, sharded):
+        _assert_bitwise(a, b)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_matches_sequential_recommend(cands, engine, n_shards):
+    """Transitively: sharded == per-request ``recommend`` under the same
+    pool-bitwise / score-ulp contract the batched path guarantees."""
+    reqs = heterogeneous_requests(cands)
+    arch = ShardedArchive.stage(cands, n_shards=n_shards)
+    for req, bat in zip(reqs, engine.recommend_batch(cands, reqs,
+                                                     archive=arch)):
+        assert_equivalent(engine.recommend(cands, req), bat)
+
+
+def test_sharded_padding_is_bit_invariant(cands, engine):
+    reqs = heterogeneous_requests(cands)
+    arch = ShardedArchive.stage(cands, n_shards=2)
+    plain = engine.recommend_batch(cands, reqs, archive=arch)
+    padded = engine.recommend_batch(cands, reqs, pad_to=16, archive=arch)
+    for a, b in zip(plain, padded):
+        _assert_bitwise(a, b)
+
+
+def test_filter_confined_to_one_shard(cands, engine):
+    """A filter whose survivors all live on one shard leaves the other
+    shards' masks empty — their +-inf phase-0 carries must merge away."""
+    arch = ShardedArchive.stage(cands, n_shards=4)
+    a0, b0 = arch.bounds[0]
+    only_first = [str(n) for n in cands.names[a0:b0][:3]]
+    reqs = [ResourceRequest(cpus=64.0, types=only_first),
+            ResourceRequest(cpus=128.0)]
+    single = engine.recommend_batch(cands, reqs,
+                                    archive=DeviceArchive.stage(cands))
+    sharded = engine.recommend_batch(cands, reqs, archive=arch)
+    for a, b in zip(single, sharded):
+        _assert_bitwise(a, b)
+    assert all(n in only_first for n in sharded[0].names)
+
+
+def test_sharded_empty_filter_raises(cands, engine):
+    arch = ShardedArchive.stage(cands, n_shards=2)
+    reqs = [ResourceRequest(cpus=8.0),
+            ResourceRequest(cpus=8.0, regions=["nowhere-9"])]
+    with pytest.raises(ValueError, match="batch row 1"):
+        engine.recommend_batch(cands, reqs, archive=arch)
+
+
+# ---------------------------------------------------------------------------
+# rolling archives: per-shard ingest == cold re-stage, at every version
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_rolling_ticks_match_cold_restage(engine, n_shards):
+    """The acceptance loop: stream ticks into per-shard rings, serve, and
+    compare against a cold full-window re-stage at every version."""
+    cands = synth_candidates(seed=5, K=48, T=WINDOW)
+    arch = ShardedRollingArchive(cands, n_shards=n_shards, name="roll")
+    reqs = heterogeneous_requests(cands)[:6]
+    rng = np.random.default_rng(1)
+    for tick in range(1, 6):
+        arch.append(rng.uniform(0, 50, 48))
+        assert arch.version == tick and arch.key == f"roll@v{tick}"
+        live = engine.recommend_batch(arch.host, reqs, archive=arch)
+        cold_set = synth_candidates(seed=5, K=48, T=WINDOW)
+        cold_set.t3 = arch.materialize().astype(np.float64)
+        cold = engine.recommend_batch(cold_set, reqs,
+                                      archive=DeviceArchive.stage(cold_set))
+        for a, b in zip(live, cold):
+            # pools bit-identical; scores ulp-tight (streamed moments vs the
+            # one-shot window reductions, same budget as the stream suite)
+            assert list(a.names) == list(b.names)
+            np.testing.assert_array_equal(a.counts, b.counts)
+            assert a.hourly_cost == b.hourly_cost
+            np.testing.assert_allclose(a.combined, b.combined,
+                                       rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_sharded_rolling_matches_single_device_rolling(engine, n_shards):
+    """Against a single-device ring fed the same columns the match is
+    *bitwise* even on scores: the rank-1 moment updates are elementwise
+    along K, so row-sliced updates produce identical bits."""
+    cands = synth_candidates(seed=6, K=40, T=WINDOW)
+    sharded = ShardedRollingArchive(cands, n_shards=n_shards, name="s")
+    single = RollingDeviceArchive(synth_candidates(seed=6, K=40, T=WINDOW),
+                                  name="m")
+    reqs = heterogeneous_requests(cands)[:5]
+    rng = np.random.default_rng(2)
+    for _ in range(4):
+        col = rng.uniform(0, 50, 40)
+        sharded.append(col)
+        single.append(col)
+        np.testing.assert_array_equal(sharded.materialize(),
+                                      single.materialize())
+        a = engine.recommend_batch(sharded.host, reqs, archive=sharded)
+        b = engine.recommend_batch(single.host, reqs, archive=single)
+        for x, y in zip(a, b):
+            _assert_bitwise(x, y)
+
+
+def test_sharded_snapshot_pins_version(engine):
+    cands = synth_candidates(seed=7, K=36, T=WINDOW)
+    arch = ShardedRollingArchive(cands, n_shards=2, name="pin")
+    reqs = heterogeneous_requests(cands)[:4]
+    rng = np.random.default_rng(3)
+    arch.append(rng.uniform(0, 50, 36))
+    snap = arch.snapshot()
+    assert isinstance(snap, ShardedSnapshot)
+    assert snap.key == "pin@v1" and snap.n_shards == 2
+    want = engine.recommend_batch(snap.host, reqs, archive=snap)
+    for _ in range(3):                 # bump shard rings under the snapshot
+        arch.append(rng.uniform(0, 50, 36))
+    assert arch.version == 4 and snap.version == 1
+    got = engine.recommend_batch(snap.host, reqs, archive=snap)
+    for a, b in zip(got, want):
+        _assert_bitwise(a, b)
+    with pytest.raises(RuntimeError, match="no single-device window"):
+        _ = snap.t3
+
+
+def test_sharded_rolling_validation():
+    cands = synth_candidates(seed=8, K=9, T=4)
+    with pytest.raises(ValueError, match="empty shards"):
+        ShardedRollingArchive(cands, n_shards=10)
+    arch = ShardedRollingArchive(cands, n_shards=3)
+    with pytest.raises(ValueError, match="column shape"):
+        arch.append(np.zeros(5))
+    with pytest.raises(RuntimeError, match="no single-device window"):
+        _ = arch.t3
+
+
+def test_concurrent_append_snapshot_never_mixes_shard_ticks():
+    """append() and snapshot() are atomic wrt each other: every per-shard
+    snapshot inside a ShardedSnapshot must belong to the same tick as the
+    stamped version — an unguarded snapshot landing between two per-shard
+    appends would pin shard 0 at tick N+1 and shard 1 at tick N under one
+    key (a mixed-window batch)."""
+    import threading
+
+    cands = synth_candidates(seed=12, K=24, T=6)
+    arch = ShardedRollingArchive(cands, n_shards=3, name="race")
+    stop = threading.Event()
+    errors: list = []
+
+    def ticker():
+        rng = np.random.default_rng(0)
+        while not stop.is_set():
+            arch.append(rng.uniform(0, 50, 24))
+
+    th = threading.Thread(target=ticker)
+    th.start()
+    try:
+        for _ in range(200):
+            snap = arch.snapshot()
+            # each shard ring takes exactly one append per tick, so every
+            # sub-snapshot's version must equal the stamped shared version
+            if any(s.version != snap.version for s in snap.shards):
+                errors.append([s.version for s in snap.shards]
+                              + [snap.version])
+    finally:
+        stop.set()
+        th.join()
+    assert not errors, f"mixed shard ticks under one key: {errors[:3]}"
+
+
+# ---------------------------------------------------------------------------
+# serve / stream integration
+# ---------------------------------------------------------------------------
+
+def _collector(seed=3, n_targets=36, cycles=WINDOW, ring=32):
+    from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                                SpotMarket, SPSQueryService)
+    mkt = SpotMarket(Catalog(seed=seed, n_regions=2), seed=seed)
+    svc = SPSQueryService(mkt, n_accounts=3000)
+    step = max(len(mkt.pool_keys) // n_targets, 1)
+    targets = [(t.name, r, az)
+               for (t, r, az) in mkt.pool_keys[::step]][:n_targets]
+    col = DataCollector(svc, targets, CollectorConfig(ring_capacity=ring))
+    col.run(cycles)
+    return col
+
+
+def test_sharded_ingestor_loop_matches_cold_restage(engine):
+    """Collector -> sharded rings -> versioned cache -> BatchServer, pools
+    matching a cold re-stage at every version (the PR 4 acceptance loop,
+    now with the K axis split)."""
+    col = _collector()
+    cache = ArchiveCache(capacity=4)
+    ing = LiveIngestor(col, window=WINDOW, cache=cache, name="live",
+                       shards=2)
+    arch = ing.prime()
+    assert isinstance(arch, ShardedRollingArchive) and arch.n_shards == 2
+    server = BatchServer(engine, bucket_sizes=(1, 4, 8))
+    reqs = heterogeneous_requests(col.to_candidate_set(window=WINDOW))[:5]
+    for _ in range(4):
+        col.run(1)
+        stale = arch.key
+        ing.poll()
+        assert arch.key in cache and stale not in cache
+        live = server.serve_archive(arch, reqs)
+        cold_set = col.to_candidate_set(window=WINDOW)
+        np.testing.assert_array_equal(
+            arch.materialize(), np.asarray(cold_set.t3, np.float32))
+        cold = engine.recommend_batch(
+            cold_set, reqs, archive=DeviceArchive.stage(cold_set))
+        for a, b in zip(live, cold):
+            assert list(a.names) == list(b.names)
+            np.testing.assert_array_equal(a.counts, b.counts)
+            assert a.hourly_cost == b.hourly_cost
+
+
+def test_sharded_admission_drain_pins_snapshot(engine):
+    """A drain against a sharded rolling source serves one ShardedSnapshot
+    across mid-flight ticks — no batch ever mixes shard versions."""
+    col = _collector()
+    ing = LiveIngestor(col, window=WINDOW, name="adm", shards=2)
+    ing.prime()
+    server = BatchServer(engine, bucket_sizes=(1, 4, 8))
+    clock = lambda: 100.0  # noqa: E731
+    q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=1.0,
+                       max_pending=4, clock=clock)
+    t1 = q.submit(ResourceRequest(cpus=64.0))
+    col.run(1)
+    ing.poll()                                    # bump to v1 while queued
+    t2 = q.submit(ResourceRequest(cpus=96.0))
+    assert q.drain(force=True) == 2
+    for t in (t1, t2):
+        assert t.result().diagnostics["archive_key"] == "adm@v1"
+        assert t.result().diagnostics["archive_version"] == 1
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="single-device host (CI sharding lane forces 4)")
+def test_shards_actually_placed_on_distinct_devices(cands):
+    arch = ShardedArchive.stage(cands, n_shards=len(jax.devices()))
+    placements = {next(iter(s.t3.devices())) for s in arch.shards}
+    assert len(placements) == min(arch.n_shards, len(jax.devices()))

@@ -326,6 +326,38 @@ def test_admission_sync_result_force_drains(admission):
     assert q.stats.drains == 1
 
 
+def test_forced_drain_does_not_count_coalesced(admission):
+    """A force drain takes everything by definition — its not-yet-due
+    tickets must not inflate the arrival-batching ``coalesced`` counter
+    (the sync ``Ticket.result`` fallback used to count every ticket)."""
+    _, _, q, clock = admission
+    t1 = q.submit(ResourceRequest(cpus=32.0))     # deadline = now + 1.0
+    t2 = q.submit(ResourceRequest(cpus=64.0))
+    t1.result()                                   # sync fallback: force drain
+    assert t1.done and t2.done
+    assert q.stats.coalesced == 0
+    assert q.stats.forced_drains == 1 and q.stats.drains == 1
+    # a genuinely due drain with a late arrival still counts coalescing
+    t3 = q.submit(ResourceRequest(cpus=16.0))
+    clock.now += 0.5
+    t4 = q.submit(ResourceRequest(cpus=8.0))
+    clock.now += 0.6                              # t3 due, t4 rides along
+    assert q.pump() == 2
+    assert q.stats.coalesced == 1 and q.stats.forced_drains == 1
+    assert q.stats.served == 4 == q.stats.submitted
+
+
+def test_admission_max_pending_validation(admission):
+    col, ing, q, clock = admission
+    with pytest.raises(ValueError, match="max_pending"):
+        AdmissionQueue(q.server, lambda: ing.archive, max_pending=0)
+    with pytest.raises(ValueError, match="max_pending"):
+        AdmissionQueue(q.server, lambda: ing.archive, max_pending=-3)
+    # default: the server's largest bucket
+    q2 = AdmissionQueue(q.server, lambda: ing.archive)
+    assert q2.max_pending == max(q.server.bucket_sizes)
+
+
 def test_admission_error_fails_the_ticket(admission):
     _, _, q, clock = admission
     t = q.submit(ResourceRequest(cpus=8.0, regions=["nowhere-42"]))
@@ -371,6 +403,66 @@ def test_ingestor_invalidates_stale_key_before_mutating():
     trace.clear()
     ing.poll()
     assert trace == [("invalidate", "order@v0"), ("put", "order@v1")]
+
+
+def test_threaded_admission_resolves_every_ticket_exactly_once(monkeypatch):
+    """Wall-clock worker + concurrent submitters: every ticket resolves
+    exactly once, and the stats ledgers balance across the admission queue
+    and the (now lock-guarded) BatchServer counters."""
+    import threading
+
+    from repro.stream.admission import Ticket
+
+    resolve_counts: dict[int, int] = {}
+    count_lock = threading.Lock()
+    orig_resolve = Ticket._resolve
+
+    def counting_resolve(self, result=None, error=None):
+        with count_lock:
+            resolve_counts[id(self)] = resolve_counts.get(id(self), 0) + 1
+        orig_resolve(self, result=result, error=error)
+
+    monkeypatch.setattr(Ticket, "_resolve", counting_resolve)
+
+    col = _collector()
+    ing = LiveIngestor(col, window=WINDOW, name="mt")
+    ing.prime()
+    server = BatchServer(RecommendationEngine(score_impl="tiled"),
+                         bucket_sizes=(1, 4, 8))
+    q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.005).start()
+    n_threads, per_thread = 4, 6
+    tickets: list = []
+    tickets_lock = threading.Lock()
+
+    def submitter(i):
+        for j in range(per_thread):
+            t = q.submit(ResourceRequest(cpus=float(8 * (i + j + 1))))
+            with tickets_lock:
+                tickets.append(t)
+
+    try:
+        threads = [threading.Thread(target=submitter, args=(i,))
+                   for i in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        recs = [t.result(timeout=60.0) for t in tickets]
+    finally:
+        q.stop()
+    n = n_threads * per_thread
+    assert len(tickets) == n
+    assert all(t.done for t in tickets)
+    assert all(r.hourly_cost > 0 for r in recs)
+    # exactly-once resolution, no lost or double drains
+    assert len(resolve_counts) == n
+    assert all(c == 1 for c in resolve_counts.values())
+    # ledgers balance: queue stats vs server stats
+    assert q.stats.submitted == n and q.stats.served == n
+    assert sum(q.stats.versions.values()) == n
+    assert server.stats.requests == n
+    assert sum(server.stats.bucket_counts.values()) == server.stats.batches
+    assert q.pending == 0 and not q.running
 
 
 def test_admission_background_worker_smoke():
