@@ -42,7 +42,7 @@ import jax
 import numpy as np
 
 from repro.configs.spotvista import CONFIG
-from repro.core import RecommendationEngine, ResourceRequest, scoring
+from repro.core import EngineConfig, RecommendationEngine, ResourceRequest, scoring
 from repro.core.types import CandidateSet
 from repro.serve import BatchServer, DeviceArchive
 from repro.stream import AdmissionQueue, LiveIngestor, RollingDeviceArchive
@@ -96,7 +96,7 @@ def _check_parity(arch: RollingDeviceArchive, reqs) -> bool:
         if not np.allclose(np.asarray(a), np.asarray(b),
                            rtol=STAT_RTOL, atol=STAT_ATOL):
             return False
-    engine = RecommendationEngine(score_impl="tiled", pool_impl="auto")
+    engine = RecommendationEngine(EngineConfig(score_impl="tiled"))
     live = engine.recommend_batch(arch.host, reqs, archive=arch)
     cold_set = CandidateSet(
         names=arch.host.names, regions=arch.host.regions, azs=arch.host.azs,
@@ -142,7 +142,7 @@ def _admission_smoke() -> bool:
     """End-to-end drain through the admission front on a live archive."""
     cands = _candidates(512, 64, seed=9)
     arch = RollingDeviceArchive(cands, name="adm")
-    server = BatchServer(RecommendationEngine(score_impl="tiled"),
+    server = BatchServer(RecommendationEngine(EngineConfig(score_impl="tiled")),
                          bucket_sizes=(1, 4, 8))
     q = AdmissionQueue(server, arch, max_wait_s=0.0)
     tickets = [q.submit(ResourceRequest(cpus=float(32 * (i + 1))))

@@ -1,0 +1,325 @@
+"""Latency under load: tail quantiles for the serving stack (ISSUE 6).
+
+The throughput benchmarks say how fast one dispatch is; this one says what
+a *request* sees when traffic is a process — p50/p99/p99.9 end-to-end
+latency through admission + batching + the real JAX dispatch, across the
+{steady, diurnal, bursty} x {filterless, distinct-mask} matrix, plus a
+2x-overload scenario exercising adaptive drains and the degraded
+pool-cache shedding tier.
+
+Method (see ``repro.loadgen``): arrivals replay on a virtual clock,
+service times are the measured wall time of each real batched dispatch —
+so the latency distribution is the real system's, while the experiment is
+deterministic per seed and independent of how long it takes to run.
+
+Rates self-calibrate against the *measured* capacity of the host that runs
+the benchmark — per-bucket service times, folded through a fixed-point
+iteration because effective capacity depends on the drain size the rate
+itself induces — so "0.6x load" and "2x overload" mean the same thing on
+every machine.  The committed
+artifact's absolute milliseconds are from the reference runner, and the CI
+gate compares smoke-size numbers with a generous multiplier for host skew.
+
+Invariants gated hard in ``--check`` (no tolerance):
+
+- every submitted ticket resolves exactly once: ``submitted == served +
+  shed`` and ``dropped == 0``, in every scenario;
+- under 2x overload with ``shed_depth`` set, the queue actually sheds, the
+  shed responses are flagged ``degraded``, and the **non-shed** p99 stays
+  within the derived SLO (max_wait + bounded-queue drain time, with
+  margin).
+
+Modes::
+
+    python -m benchmarks.latency_slo                # full matrix at the
+        # paper scale (K=32768, T=1008); writes BENCH_latency.json
+    python -m benchmarks.latency_slo --smoke        # small-K matrix
+    python -m benchmarks.latency_slo --smoke --check benchmarks/BENCH_latency.json
+        # CI lane: invariant gates + p99 regression vs the artifact
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.spotvista import CONFIG
+from repro.core import EngineConfig
+from repro.core.types import CandidateSet
+from repro.loadgen import (MMPP2, Diurnal, LoadHarness, Steady,
+                           distinct_mask_mix, filterless_mix, mixed_mix)
+from repro.serve import BatchServer, DeviceArchive
+
+from ._world import row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_latency.json"
+
+T_WINDOW = int(CONFIG.window_days * 24 * 60 / CONFIG.collect_period_min)
+T_SMOKE = 168
+K_FULL = 32768
+K_SMOKE = 1024
+BUCKETS = (1, 8, 64)
+MAX_WAIT_S = 0.05           # admission deadline: the latency floor
+HORIZON_FULL_S = 20.0       # virtual seconds per scenario
+HORIZON_SMOKE_S = 4.0
+UTILIZATION = 0.6           # offered load for the non-overload scenarios
+OVERLOAD = 2.0              # the shedding scenario's load factor
+SHED_DEPTH_BUCKETS = 2      # shed_depth = this many max-buckets of backlog
+SLO_MARGIN = 3.0            # derived-SLO multiplier (absorbs host jitter)
+# --check regression gate: generous, p99 here folds in real dispatch time
+CHECK_P99_MULTIPLIER = 3.0
+CHECK_P99_SLACK_MS = 10.0
+
+
+def _candidates(K: int, T: int, seed: int = 0) -> CandidateSet:
+    rng = np.random.default_rng(seed)
+    fams = rng.choice(["m5", "c5", "r5", "t3"], K)
+    return CandidateSet(
+        names=np.array([f"{fams[i]}.x{i}" for i in range(K)]),
+        regions=rng.choice(["us-east-1", "eu-west-1", "ap-north-1"], K),
+        azs=rng.choice(["a", "b", "c"], K),
+        families=fams,
+        categories=rng.choice(["general", "compute", "memory"], K),
+        vcpus=rng.choice([2, 4, 8, 16, 32, 64, 96], K).astype(np.float64),
+        memory_gb=rng.choice([4, 8, 16, 64, 128, 384], K).astype(np.float64),
+        prices=rng.uniform(0.01, 5.0, K),
+        t3=rng.uniform(0.0, 50.0, (K, T)),
+    )
+
+
+def _bucket_service_s(server: BatchServer, archive, mix) -> dict:
+    """Measured best-of serve wall time per ladder bucket, post-warmup."""
+    rng = np.random.default_rng(99)
+    out = {}
+    for bucket in server.bucket_sizes:
+        reqs = [mix.sample(rng) for _ in range(bucket)]
+        server.serve(archive, reqs)             # compile
+        best = float("inf")
+        deadline = time.perf_counter() + 0.5
+        while time.perf_counter() < deadline:
+            t0 = time.perf_counter()
+            server.serve(archive, reqs)
+            best = min(best, time.perf_counter() - t0)
+        out[bucket] = best
+    return out
+
+
+def _service_s(server: BatchServer, svc: dict, n: int) -> float:
+    """Predicted drain service time for ``n`` requests (bucketed chunks)."""
+    return sum(svc[bucket] for _, bucket in server.plan_chunks(n))
+
+
+def _stable_rate(server: BatchServer, svc: dict, utilization: float,
+                 max_wait_s: float) -> float:
+    """The arrival rate that loads the system at ``utilization``.
+
+    Capacity is *batch-size dependent*: a drain of 64 amortizes the fixed
+    dispatch cost 64 ways, a deadline-driven drain of 3 does not.  Naively
+    taking ``utilization * largest-bucket capacity`` therefore
+    over-commits whenever the resulting rate only fills small drains
+    within ``max_wait`` (acute at large K, where a single dispatch costs
+    tens of ms) — the "0.6x load" scenario would actually be
+    super-critical and measure queue divergence, not steady-state tails.
+    Iterate to the fixed point: rate -> typical drain size it induces ->
+    effective capacity at that size -> rate.
+    """
+    big = max(server.bucket_sizes)
+    rate = utilization * big / svc[big]
+    for _ in range(48):
+        n = max(1, min(int(rate * max_wait_s) + 1, big))
+        eff_cap = n / _service_s(server, svc, n)
+        rate = 0.5 * rate + 0.5 * utilization * eff_cap
+    return rate
+
+
+def _derived_slo_s(capacity_rps: float, shed_depth: int) -> float:
+    """Worst-case bounded-queue latency: deadline + draining the backlog.
+
+    With shedding capping the queue at ``shed_depth`` and adaptive drains
+    of the largest bucket, a non-shed request waits at most its admission
+    deadline plus the time to serve the backlog ahead of it; the margin
+    absorbs scheduling noise and per-batch service variance.
+    """
+    drain_s = (shed_depth + max(BUCKETS)) / capacity_rps
+    return SLO_MARGIN * (MAX_WAIT_S + drain_s)
+
+
+def _matrix(K: int, T: int, horizon_s: float) -> dict:
+    """The {steady, diurnal, bursty} x {filterless, distinct-mask} grid."""
+    cands = _candidates(K, T)
+    server = BatchServer(bucket_sizes=BUCKETS,
+                         config=EngineConfig(score_impl="tiled"))
+    archive = DeviceArchive.stage(cands)
+    mixes = {
+        "filterless": filterless_mix(),
+        "distinct-mask": distinct_mask_mix(cands, n_filters=max(BUCKETS)),
+    }
+    # calibrate against the harder mix so no scenario is accidentally >1x:
+    # worst-case measured service per bucket, then the utilization fixed
+    # point (effective capacity depends on the drain size the rate itself
+    # induces — see _stable_rate).  ``cap`` stays the full-bucket rate: the
+    # overload scenario's bounded queue really does drain at bucket size.
+    per_mix = [_bucket_service_s(server, archive, m) for m in mixes.values()]
+    svc = {b: max(s[b] for s in per_mix) for b in server.bucket_sizes}
+    cap = max(BUCKETS) / svc[max(BUCKETS)]
+    rate = _stable_rate(server, svc, UTILIZATION, MAX_WAIT_S)
+    arrivals = {
+        "steady": Steady(rate=rate),
+        "diurnal": Diurnal(base_rate=0.3 * rate, peak_rate=1.7 * rate,
+                           period_s=horizon_s / 2.0),
+        "bursty": MMPP2(rate_low=0.5 * rate, rate_high=2.5 * rate,
+                        mean_low_s=horizon_s / 8.0,
+                        mean_high_s=horizon_s / 24.0),
+    }
+    harness = LoadHarness(server, archive, max_wait_s=MAX_WAIT_S,
+                          adaptive=True)
+    scenarios = []
+    seed = 0
+    for mix_name, mix in mixes.items():
+        harness.warmup(mix)
+        for arr_name, arr in arrivals.items():
+            seed += 1      # deterministic (str hash is salted per process)
+            rep = harness.run(mix, arr, horizon_s, seed=seed,
+                              name=f"{mix_name}/{arr_name}")
+            scenarios.append(rep.to_dict())
+
+    # 2x overload + shedding: bounded queue, degraded tier, zero drops
+    shed_depth = SHED_DEPTH_BUCKETS * max(BUCKETS)
+    over_mix = mixed_mix(cands, n_filters=8)
+    over = LoadHarness(server, archive, max_wait_s=MAX_WAIT_S,
+                       adaptive=True, shed_depth=shed_depth)
+    over.warmup(over_mix)
+    warmed = over.warm_pool_cache(over_mix)     # pre-failover memo warm
+    rep = over.run(over_mix, Steady(rate=OVERLOAD * cap), horizon_s,
+                   seed=13, name="mixed/overload-2x")
+    slo_s = _derived_slo_s(cap, shed_depth)
+    overload = rep.to_dict()
+    overload.update({
+        "load_factor": OVERLOAD, "shed_depth": shed_depth,
+        "memo_warmed": warmed,
+        "slo_ms": slo_s * 1e3,
+        "non_shed_p99_ms": rep.latency.quantile(0.99) * 1e3,
+        "within_slo": rep.latency.quantile(0.99) <= slo_s,
+    })
+    return {
+        "K": K, "T": T, "horizon_s": horizon_s,
+        "capacity_rps": round(cap, 1),
+        "stable_rate_rps": round(rate, 1),
+        "max_wait_ms": MAX_WAIT_S * 1e3,
+        "scenarios": scenarios,
+        "overload": overload,
+    }
+
+
+def _violations(section: dict) -> list[str]:
+    """The invariant gates: exactly-once ledgers + SLO-bounded shedding."""
+    out = []
+    for s in section["scenarios"] + [section["overload"]]:
+        if s["dropped"] != 0:
+            out.append(f"{s['name']}: dropped {s['dropped']} tickets")
+        if s["errors"] != 0:
+            out.append(f"{s['name']}: {s['errors']} ticket errors")
+        if s["submitted"] != s["served"] + s["shed"]:
+            out.append(f"{s['name']}: ledger imbalance")
+    over = section["overload"]
+    if over["shed"] == 0:
+        out.append("overload-2x: shedding never engaged")
+    if over["shed_latency"]["n"] != over["shed"]:
+        out.append("overload-2x: shed tickets missing latency accounting")
+    if not over["within_slo"]:
+        out.append(f"overload-2x: non-shed p99 {over['non_shed_p99_ms']:.1f}ms"
+                   f" exceeds SLO {over['slo_ms']:.1f}ms")
+    return out
+
+
+def _rows(section: dict) -> list[str]:
+    rows = []
+    for s in section["scenarios"] + [section["overload"]]:
+        lat = s["latency"]
+        rows.append(row(
+            f"latency/{s['name']}", lat["p99_ms"] * 1e3,
+            p50_ms=round(lat["p50_ms"], 2), p99_ms=round(lat["p99_ms"], 2),
+            p999_ms=round(lat["p999_ms"], 2), served=s["served"],
+            shed=s["shed"], dropped=s["dropped"]))
+    return rows
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size matrix with invariants enforced."""
+    section = _matrix(K_SMOKE, T_SMOKE, HORIZON_SMOKE_S)
+    bad = _violations(section)
+    if bad:
+        raise AssertionError("; ".join(bad))
+    return _rows(section)
+
+
+def _check(artifact: Path) -> int:
+    committed = json.loads(artifact.read_text())["smoke"]
+    section = _matrix(K_SMOKE, T_SMOKE, HORIZON_SMOKE_S)
+    bad = _violations(section)
+    ref = {s["name"]: s for s in committed["scenarios"]}
+    for s in section["scenarios"]:
+        base = ref.get(s["name"])
+        if base is None:
+            continue
+        ceiling = (CHECK_P99_MULTIPLIER * base["latency"]["p99_ms"]
+                   + CHECK_P99_SLACK_MS)
+        print(row(f"latency/check_{s['name']}",
+                  s["latency"]["p99_ms"] * 1e3,
+                  p99_ms=round(s["latency"]["p99_ms"], 2),
+                  committed=round(base["latency"]["p99_ms"], 2),
+                  ceiling=round(ceiling, 2)))
+        if s["latency"]["p99_ms"] > ceiling:
+            bad.append(f"{s['name']}: p99 {s['latency']['p99_ms']:.1f}ms > "
+                       f"ceiling {ceiling:.1f}ms "
+                       f"(committed {base['latency']['p99_ms']:.1f}ms)")
+    if bad:
+        for b in bad:
+            print(f"# FAIL: {b}", file=sys.stderr)
+        return 1
+    print("# latency check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-K matrix only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_latency.json "
+                         "and exit non-zero on violation/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full run")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    print("name,us_per_call,derived")
+    if args.smoke:
+        for line in run():
+            print(line)
+        return
+    full = _matrix(K_FULL, T_WINDOW, HORIZON_FULL_S)
+    smoke = _matrix(K_SMOKE, T_SMOKE, HORIZON_SMOKE_S)
+    payload = {
+        "meta": {"backend": jax.default_backend(), "buckets": BUCKETS,
+                 "utilization": UTILIZATION, "overload": OVERLOAD},
+        "full": full,
+        "smoke": smoke,
+    }
+    for line in _rows(full):
+        print(line)
+    bad = _violations(full) + _violations(smoke)
+    if bad:
+        raise SystemExit("# FAIL: " + "; ".join(bad))
+    args.out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

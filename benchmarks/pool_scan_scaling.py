@@ -35,7 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import RecommendationEngine, ResourceRequest
+from repro.core import EngineConfig, RecommendationEngine, ResourceRequest
 from repro.core import pool as pool_lib
 from repro.core.types import CandidateSet
 from repro.kernels.pool_scan import DEFAULT_TILE
@@ -154,7 +154,7 @@ def _batched_pair(K: int, B: int) -> dict:
     reqs = _requests(B)
     rec = {"K": K, "B": B}
     for impl in ("dense", "tiled"):
-        eng = RecommendationEngine(pool_impl=impl)
+        eng = RecommendationEngine(EngineConfig(pool_impl=impl))
         t = _bench(lambda: eng.recommend_batch(cands, reqs, pad_to=B))
         rec[f"{impl}_us"] = t * 1e6
         rec[f"{impl}_rps"] = B / t

@@ -28,6 +28,7 @@ MODULES = [
     "scoring_scaling",
     "ingest_throughput",
     "shard_scaling",
+    "latency_slo",
     "kernels_micro",
     "roofline",
 ]

@@ -56,7 +56,7 @@ import jax
 import numpy as np
 
 from repro.configs.spotvista import CONFIG
-from repro.core import RecommendationEngine, ResourceRequest
+from repro.core import EngineConfig, RecommendationEngine, ResourceRequest
 from repro.core.types import CandidateSet
 from repro.serve import DeviceArchive
 from repro.shard import ShardedArchive, ShardedRollingArchive
@@ -118,7 +118,7 @@ def _pools_identical(a, b) -> bool:
 def _measure_width(K: int, T: int) -> dict:
     cands = _candidates(K, T)
     reqs = _requests(cands)
-    engine = RecommendationEngine(score_impl="tiled", pool_impl="tiled")
+    engine = RecommendationEngine(EngineConfig(score_impl="tiled", pool_impl="tiled"))
     single_arch = DeviceArchive.stage(cands, key=f"single{K}")
     single = engine.recommend_batch(cands, reqs, archive=single_arch)
     t_single = _bench(lambda: engine.recommend_batch(
@@ -142,7 +142,7 @@ def _rolling_parity(K: int = 512, T: int = 64, n_shards: int = 4,
     """Per-shard ingest ticks, then recommend_batch vs cold re-stage."""
     cands = _candidates(K, T, seed=5)
     arch = ShardedRollingArchive(cands, n_shards=n_shards, name="bench")
-    engine = RecommendationEngine(score_impl="tiled", pool_impl="tiled")
+    engine = RecommendationEngine(EngineConfig(score_impl="tiled", pool_impl="tiled"))
     reqs = _requests(cands, 8)
     rng = np.random.default_rng(11)
     for _ in range(ticks):

@@ -13,6 +13,9 @@
 from .types import (  # noqa: F401
     CandidateSet, Recommendation, RequestBatch, ResourceRequest,
 )
+from .config import (  # noqa: F401
+    APIDeprecationWarning, EngineConfig, resolve_engine_config,
+)
 from .engine import RecommendationEngine  # noqa: F401
 from .scoring import (  # noqa: F401
     availability_scores, availability_scores_masked, candidate_stats,

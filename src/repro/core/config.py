@@ -1,0 +1,122 @@
+"""One frozen configuration object for the whole serving stack.
+
+Before this module, the same four knobs were scattered as loose keyword
+arguments across three constructors: ``pool_impl`` / ``score_impl`` on
+:class:`~repro.core.RecommendationEngine` *and* duplicated on
+:class:`~repro.serve.BatchServer` (for its default-constructed engine),
+``cache_capacity`` on ``BatchServer``, and ``max_bytes`` reachable only by
+building an :class:`~repro.serve.ArchiveCache` by hand.  Every new layer
+(live ingestion, sharding, the load harness) re-threaded the same names, and
+nothing guaranteed the engine a server built agreed with the cache beside it.
+
+:class:`EngineConfig` is the single source of truth: build one, hand it to
+``RecommendationEngine(config=...)``, ``BatchServer(config=...)``, and
+``LiveIngestor(..., config=...)``, and every layer derives its knobs from the
+same frozen object.  The old keyword arguments keep working through
+:func:`resolve_engine_config` — they emit :class:`APIDeprecationWarning`
+(a ``DeprecationWarning`` subclass tier-1 CI escalates to an error, so the
+repo's own code stays on the new surface) and map onto an equivalent config.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, replace
+
+from . import pool as pool_lib
+from . import scoring
+
+
+class APIDeprecationWarning(DeprecationWarning):
+    """Deprecated serving-API surface (shimmed kwargs, ``serve_archive``).
+
+    A distinct subclass so CI can turn *our* deprecations into errors
+    (``filterwarnings = error::repro.core.config.APIDeprecationWarning``)
+    without tripping on unrelated ``DeprecationWarning``\\ s from jax/numpy.
+    """
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    """Every tunable of the scoring/serving stack, in one frozen value.
+
+    Parameters
+    ----------
+    pool_impl : str
+        Algorithm 1 all-prefix scan: ``"dense"`` (O(K^2) allocation matrix),
+        ``"tiled"`` (streaming O(K) kernel), or ``"auto"`` (tiled from
+        ``POOL_TILED_AUTO_K`` candidates up).
+    score_impl : str
+        Batched Eq. 2-4 scoring stage: ``"dense"`` re-reduces the (K, T)
+        window every batch, ``"tiled"`` streams the O(K) per-request
+        remainder over cached per-candidate statistics, ``"auto"`` switches
+        at ``SCORE_TILED_AUTO_K``.
+    cache_capacity : int
+        Entry count of the serve layer's staged-archive LRU.
+    cache_max_bytes : int | None
+        Optional device-byte budget for the same LRU (``None`` = uncapped).
+
+    The dataclass is frozen so a config can be shared across threads and
+    layers without defensive copies; derive variants with :meth:`with_`.
+    """
+
+    pool_impl: str = "auto"
+    score_impl: str = "auto"
+    cache_capacity: int = 4
+    cache_max_bytes: int | None = None
+
+    def __post_init__(self):
+        if self.pool_impl not in pool_lib.POOL_IMPLS:
+            raise ValueError(f"pool_impl must be one of {pool_lib.POOL_IMPLS}, "
+                             f"got {self.pool_impl!r}")
+        if self.score_impl not in scoring.SCORE_IMPLS:
+            raise ValueError(f"score_impl must be one of {scoring.SCORE_IMPLS}, "
+                             f"got {self.score_impl!r}")
+        if self.cache_capacity < 1:
+            raise ValueError("cache_capacity must be >= 1")
+        if self.cache_max_bytes is not None and self.cache_max_bytes < 1:
+            raise ValueError("cache_max_bytes must be >= 1")
+
+    def with_(self, **changes) -> "EngineConfig":
+        """A copy with ``changes`` applied (validation re-runs)."""
+        return replace(self, **changes)
+
+    # -- factories ---------------------------------------------------------
+    # (lazy imports: engine/serve import this module at load time)
+
+    def build_engine(self):
+        """A :class:`~repro.core.RecommendationEngine` on this config."""
+        from .engine import RecommendationEngine
+        return RecommendationEngine(config=self)
+
+    def build_cache(self):
+        """An :class:`~repro.serve.ArchiveCache` on this config's budgets."""
+        from ..serve.archive import ArchiveCache
+        return ArchiveCache(capacity=self.cache_capacity,
+                            max_bytes=self.cache_max_bytes)
+
+
+def resolve_engine_config(config: EngineConfig | None,
+                          *, stacklevel: int = 3,
+                          **legacy) -> EngineConfig:
+    """Merge a ``config`` argument with shimmed legacy kwargs.
+
+    ``legacy`` holds the deprecated per-constructor kwargs (value ``None``
+    means "not passed").  Passing any of them without a ``config`` warns
+    with :class:`APIDeprecationWarning` and maps them onto a fresh
+    :class:`EngineConfig`; passing both is an error (two sources of truth).
+    ``stacklevel`` points the warning at the caller's caller — the user code
+    holding the deprecated kwarg, not the constructor forwarding it.
+    """
+    given = {k: v for k, v in legacy.items() if v is not None}
+    if given:
+        if config is not None:
+            raise TypeError(
+                "pass either config=EngineConfig(...) or the legacy kwargs "
+                f"({', '.join(sorted(given))}), not both")
+        args = ", ".join(f"{k}={v!r}" for k, v in sorted(given.items()))
+        warnings.warn(
+            f"the {', '.join(sorted(given))} keyword argument(s) are "
+            f"deprecated; pass config=EngineConfig({args}) instead",
+            APIDeprecationWarning, stacklevel=stacklevel)
+        return EngineConfig(**given)
+    return config if config is not None else EngineConfig()

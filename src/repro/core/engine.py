@@ -34,6 +34,7 @@ import numpy as np
 from . import pool as pool_lib
 from . import scoring
 from ..kernels import score_fuse as score_fuse_lib
+from .config import EngineConfig, resolve_engine_config
 from .types import CandidateSet, Recommendation, RequestBatch, ResourceRequest
 
 
@@ -151,34 +152,37 @@ def _apply_max_types(idx: np.ndarray, counts: np.ndarray, comb: np.ndarray,
 class RecommendationEngine:
     """Stateless scoring + pool formation over a candidate archive slice.
 
-    ``pool_impl`` selects the Algorithm 1 all-prefix scan: ``"dense"``
-    (O(K^2) allocation matrix), ``"tiled"`` (streaming kernel, O(K) memory —
-    required for archives of tens of thousands of candidates), or ``"auto"``
-    (default: tiled from ``pool_lib.POOL_TILED_AUTO_K`` candidates up).
-    Both produce bit-identical pools.
+    ``config`` (an :class:`~repro.core.EngineConfig`) is the one place the
+    stack's tunables live; the engine consumes its ``pool_impl`` and
+    ``score_impl`` fields:
 
-    ``score_impl`` selects the batched scoring stage the same way:
-    ``"dense"`` re-evaluates the full Eq. 3 chain over the (K, T) archive
-    slice every batch; ``"tiled"`` streams the per-request O(K) remainder
-    (``repro.kernels.score_fuse``) over per-candidate statistics that are
-    computed once — and cached on the staged archive when one is supplied —
-    turning the batched scoring stage from O(K*T + B*K) per batch into
-    O(B*K) amortized.  ``"auto"`` switches at
-    ``scoring.SCORE_TILED_AUTO_K`` candidates.
+    - ``pool_impl`` selects the Algorithm 1 all-prefix scan: ``"dense"``
+      (O(K^2) allocation matrix), ``"tiled"`` (streaming kernel, O(K)
+      memory — required for archives of tens of thousands of candidates),
+      or ``"auto"`` (default: tiled from ``pool_lib.POOL_TILED_AUTO_K``
+      candidates up).  Both produce bit-identical pools.
+    - ``score_impl`` selects the batched scoring stage the same way:
+      ``"dense"`` re-evaluates the full Eq. 3 chain over the (K, T) archive
+      slice every batch; ``"tiled"`` streams the per-request O(K) remainder
+      (``repro.kernels.score_fuse``) over per-candidate statistics that are
+      computed once — and cached on the staged archive when one is
+      supplied — turning the batched scoring stage from O(K*T + B*K) per
+      batch into O(B*K) amortized.  ``"auto"`` switches at
+      ``scoring.SCORE_TILED_AUTO_K`` candidates.
+
+    The per-knob ``pool_impl=`` / ``score_impl=`` keyword arguments are
+    deprecated (:class:`~repro.core.config.APIDeprecationWarning`); they
+    still work and map onto an equivalent config.
     """
 
-    def __init__(self, *, use_vectorized_pool: bool = True,
-                 pool_impl: str = "auto", score_impl: str = "auto"):
-        if pool_impl not in pool_lib.POOL_IMPLS:
-            raise ValueError(
-                f"pool_impl must be one of {pool_lib.POOL_IMPLS}, got {pool_impl!r}")
-        if score_impl not in scoring.SCORE_IMPLS:
-            raise ValueError(
-                f"score_impl must be one of {scoring.SCORE_IMPLS}, "
-                f"got {score_impl!r}")
+    def __init__(self, config: EngineConfig | None = None, *,
+                 use_vectorized_pool: bool = True,
+                 pool_impl: str | None = None, score_impl: str | None = None):
+        self.config = resolve_engine_config(
+            config, pool_impl=pool_impl, score_impl=score_impl)
         self._use_vectorized = use_vectorized_pool
-        self.pool_impl = pool_impl
-        self.score_impl = score_impl
+        self.pool_impl = self.config.pool_impl
+        self.score_impl = self.config.score_impl
 
     def score(self, cands: CandidateSet, req: ResourceRequest):
         """Return (combined S, availability AS, cost CS) for all candidates."""

@@ -80,6 +80,22 @@ class ResourceRequest:
     def capacity_of(self, cands: CandidateSet) -> np.ndarray:
         return cands.vcpus if self.cpus is not None else cands.memory_gb
 
+    def signature(self) -> tuple:
+        """Canonical hashable identity of everything that shapes the pool.
+
+        Two requests with equal signatures are interchangeable to the
+        engine: same filters, same capacity axis and amount, same Eq. 3/4
+        parameters, same diversity cap.  Filter lists are order-insensitive
+        (sorted) because ``filter_mask`` is a set-membership test.  This is
+        the key of the admission layer's degraded "cached-pool" tier
+        (:class:`repro.serve.PoolCache`): under overload, a shed request is
+        answered with the last pool computed for its exact signature.
+        """
+        norm = lambda v: None if v is None else tuple(sorted(v))  # noqa: E731
+        return (self.cpus, self.memory_gb, norm(self.regions),
+                norm(self.azs), norm(self.families), norm(self.categories),
+                norm(self.types), self.weight, self.lam, self.max_types)
+
     def filter_mask(self, cands: CandidateSet) -> np.ndarray:
         """Boolean mask of candidates surviving this request's filters."""
         mask = np.ones(len(cands), bool)

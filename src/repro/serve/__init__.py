@@ -16,8 +16,9 @@ shape of traffic efficiently:
 
 The live counterpart — rolling archives that absorb collector ticks in O(K),
 versioned cache keys, and deadline-batched admission — lives in
-``repro.stream`` and plugs into this layer via ``BatchServer.serve_archive``
+``repro.stream`` and plugs into this layer via ``BatchServer.serve``
 and ``ArchiveCache.put``/``invalidate``.
 """
-from .archive import ArchiveCache, DeviceArchive  # noqa: F401
+from .archive import ArchiveCache, DeviceArchive, PoolCache  # noqa: F401
+from .histogram import LatencyHistogram  # noqa: F401
 from .server import BatchServer, ServeStats  # noqa: F401

@@ -8,14 +8,15 @@ slices) hot at a bounded memory footprint.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
 
 from ..core import scoring
-from ..core.types import CandidateSet
+from ..core.types import CandidateSet, Recommendation, ResourceRequest
 
 
 @dataclass(frozen=True)
@@ -183,3 +184,67 @@ class ArchiveCache:
     @property
     def nbytes(self) -> int:
         return sum(e.nbytes for e in self._entries.values())
+
+
+class PoolCache:
+    """Last-response memo keyed by request signature — the degraded tier.
+
+    The admission layer's backpressure story needs an answer cheaper than a
+    full scoring dispatch but better than a drop: under overload, a shed
+    request is resolved with the **last pool computed for its exact request
+    signature** (:meth:`repro.core.ResourceRequest.signature` — filters,
+    capacity axis + amount, Eq. 3/4 parameters, diversity cap), flagged
+    degraded.  The cached pool was computed against a slightly older archive
+    version — that staleness, bounded by how recently the signature was
+    served, is the price of answering in O(1) while the batch path is
+    saturated.
+
+    Every successful drain :meth:`put`\\ s its (request, recommendation)
+    pairs, so the memo tracks exactly the traffic mix that is actually
+    arriving; signatures never served full-path simply miss (and the shed
+    path must then keep the ticket queued — the zero-drop contract).
+
+    Thread-safe: ``put``/``get`` take an internal lock (the admission
+    worker and concurrent submitters race here by design), unlike the
+    stats objects which piggyback on their owners' locks.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self.hits = 0
+        self.misses = 0
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+
+    def put(self, request: ResourceRequest, rec: Recommendation) -> None:
+        sig = request.signature()
+        with self._lock:
+            self._entries[sig] = rec
+            self._entries.move_to_end(sig)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+
+    def get(self, request: ResourceRequest) -> Recommendation | None:
+        """The last full-path pool for this signature, or ``None``.
+
+        Returns a *copy* with fresh diagnostics (``degraded: True``,
+        ``served_from: "pool_cache"``) so resolving a shed ticket can never
+        mutate the memoized original.
+        """
+        sig = request.signature()
+        with self._lock:
+            rec = self._entries.get(sig)
+            if rec is None:
+                self.misses += 1
+                return None
+            self._entries.move_to_end(sig)
+            self.hits += 1
+            return replace(rec, diagnostics={
+                **rec.diagnostics, "degraded": True,
+                "served_from": "pool_cache"})
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)

@@ -7,6 +7,14 @@ interval, splits them into chunks from a fixed ladder of batch sizes
 chunk through the fused :meth:`RecommendationEngine.recommend_batch`
 dispatch against a device-staged archive.
 
+``serve`` is the **single entry point** for every operand the stack knows:
+a host :class:`~repro.core.CandidateSet` (staged through the LRU cache), an
+already-staged :class:`DeviceArchive`, a live
+:class:`~repro.stream.RollingDeviceArchive` or its version-pinned
+:class:`~repro.stream.ArchiveSnapshot`, and the K-sharded archives of
+``repro.shard`` — callers never branch on archive type (the old
+``serve_archive`` name survives as a deprecated alias).
+
 Why bucketing: XLA compiles one program per (B, K) shape.  Serving raw
 arrival sizes would compile for every distinct B ever seen; snapping to a
 small ladder bounds compilations to ``len(bucket_sizes)`` per archive width
@@ -19,17 +27,22 @@ width: dense O(K^2) for small archives, the tiled streaming kernel
 (``repro.kernels.pool_scan``) beyond ``POOL_TILED_AUTO_K`` candidates — so a
 bucket ladder over a SpotLake-scale multi-region archive (tens of thousands
 of (type, AZ) candidates) stays a single dispatch per chunk instead of
-splitting the K axis to fit the B x K x K buffer.  Override with the
-``pool_impl`` parameter.
+splitting the K axis to fit the B x K x K buffer.  Configure with
+:class:`~repro.core.EngineConfig`.
 """
 from __future__ import annotations
 
 import threading
+import time
+import warnings
 from dataclasses import dataclass, field
 
+from ..core.config import (APIDeprecationWarning, EngineConfig,
+                           resolve_engine_config)
 from ..core.engine import RecommendationEngine
 from ..core.types import CandidateSet, Recommendation
 from .archive import ArchiveCache
+from .histogram import LatencyHistogram
 
 DEFAULT_BUCKETS = (1, 8, 64, 256)
 
@@ -38,15 +51,22 @@ DEFAULT_BUCKETS = (1, 8, 64, 256)
 class ServeStats:
     """Counters accumulated across ``serve`` calls.
 
-    ``BatchServer`` mutates these under its stats lock: ``serve_archive``
+    ``BatchServer`` mutates these under its stats lock: ``serve``
     is reached concurrently by the admission worker thread and direct
     callers, and unsynchronized ``+=`` on the counters would drop updates.
+
+    ``latency`` is the streaming histogram of whole-call service times —
+    one sample per ``serve`` call, covering every chunk the call dispatched
+    (batch assembly through device read-back).  It is the *service-time*
+    half of the latency story; the *end-to-end* half (queueing included)
+    lives on :class:`~repro.stream.AdmissionStats`.
     """
 
     requests: int = 0
     batches: int = 0
     padded_slots: int = 0
     bucket_counts: dict = field(default_factory=dict)   # bucket size -> #batches
+    latency: LatencyHistogram = field(default_factory=LatencyHistogram)
 
     def record(self, n_requests: int, bucket: int) -> None:
         self.requests += n_requests
@@ -55,42 +75,47 @@ class ServeStats:
         self.bucket_counts[bucket] = self.bucket_counts.get(bucket, 0) + 1
 
 
+def _is_archive(target) -> bool:
+    """Anything engine-ready: staged arrays + the host catalog attached."""
+    return hasattr(target, "host") and (hasattr(target, "score_stats")
+                                        or hasattr(target, "is_sharded"))
+
+
 class BatchServer:
     """Serve request batches against cached device-staged archives.
 
     Parameters
     ----------
     engine : RecommendationEngine, optional
-        The scoring/pool engine (a default one is built if omitted).
+        The scoring/pool engine.  Default: one built from ``config`` — pass
+        an engine only when it needs knobs the config doesn't carry.
+    config : EngineConfig, optional
+        The stack's tunables: ``pool_impl`` / ``score_impl`` for the
+        default-constructed engine, ``cache_capacity`` / ``cache_max_bytes``
+        for the archive LRU.  The per-knob ``pool_impl=`` / ``score_impl=``
+        / ``cache_capacity=`` keyword arguments are deprecated shims that
+        map onto an equivalent config (``APIDeprecationWarning``).
     bucket_sizes : tuple[int, ...]
         Allowed padded batch sizes, ascending.  Arrivals are chunked
         greedily by the largest bucket, and the remainder is padded up to
         the smallest bucket that covers it.
-    cache_capacity : int
-        Number of device-staged archives kept hot (LRU).
-    pool_impl : str
-        Algorithm 1 scan selection ("dense" / "tiled" / "auto") for the
-        default-constructed engine; ignored when ``engine`` is provided
-        (configure that engine directly instead).
-    score_impl : str
-        Scoring-stage selection ("dense" / "tiled" / "auto") for the
-        default-constructed engine, same contract as ``pool_impl``.  The
-        tiled stage reuses each cached archive's per-candidate statistics
-        (``DeviceArchive.score_stats``), so repeated batches against a hot
-        archive skip the O(K*T) Eq. 3 reductions entirely.
     """
 
     def __init__(self, engine: RecommendationEngine | None = None, *,
+                 config: EngineConfig | None = None,
                  bucket_sizes: tuple[int, ...] = DEFAULT_BUCKETS,
-                 cache_capacity: int = 4, pool_impl: str = "auto",
-                 score_impl: str = "auto"):
+                 cache_capacity: int | None = None,
+                 pool_impl: str | None = None, score_impl: str | None = None):
         if not bucket_sizes or any(b < 1 for b in bucket_sizes):
             raise ValueError("bucket_sizes must be positive")
+        self.config = resolve_engine_config(
+            config, cache_capacity=cache_capacity, pool_impl=pool_impl,
+            score_impl=score_impl)
         self.engine = (engine if engine is not None
-                       else RecommendationEngine(pool_impl=pool_impl,
-                                                 score_impl=score_impl))
+                       else RecommendationEngine(config=self.config))
         self.bucket_sizes = tuple(sorted(set(bucket_sizes)))
-        self.cache = ArchiveCache(capacity=cache_capacity)
+        self.cache = ArchiveCache(capacity=self.config.cache_capacity,
+                                  max_bytes=self.config.cache_max_bytes)
         self.stats = ServeStats()
         self._stats_lock = threading.Lock()
 
@@ -115,36 +140,48 @@ class BatchServer:
             n -= fit
         return chunks
 
-    def serve(self, cands: CandidateSet, requests, *,
+    def serve(self, target, requests, *,
               archive_key: str | None = None) -> list[Recommendation]:
         """Recommend pools for ``requests``; results align with the input.
 
-        The candidate set is staged on device through the LRU cache (keyed
-        by content fingerprint, or ``archive_key`` when provided).
+        ``target`` is any operand the stack produces — the dispatch is on
+        its type, so callers never branch:
+
+        - :class:`~repro.core.CandidateSet` — staged on device through the
+          LRU cache (keyed by content fingerprint, or ``archive_key`` when
+          provided);
+        - :class:`DeviceArchive` — already staged, served directly;
+        - a live :class:`~repro.stream.RollingDeviceArchive` or its
+          version-pinned :class:`~repro.stream.ArchiveSnapshot` — served
+          directly, **bypassing** the LRU: a rolling archive re-keys itself
+          every collector tick, so routing it through ``cache.get`` would
+          re-hash and re-stage (the ingestor manages cache membership via
+          ``put``/``invalidate``);
+        - a K-sharded archive/snapshot (``repro.shard``) — served directly;
+          the engine routes ``is_sharded`` operands to the per-shard
+          pipeline, so sharding is invisible beyond the staging step.
+
+        Bucketing, padding, and stats accounting are identical across all
+        operand types; ``archive_key`` is only meaningful for the
+        ``CandidateSet`` path (a pre-staged operand already carries its key).
         """
         requests = list(requests)
         if not requests:
             return []
-        return self.serve_archive(self.cache.get(cands, key=archive_key),
-                                  requests)
-
-    def serve_archive(self, archive, requests) -> list[Recommendation]:
-        """Serve against an already-staged archive, bypassing the LRU.
-
-        This is the live-ingestion entry point (``repro.stream``): a rolling
-        archive — or a version-pinned snapshot of one — re-keys itself every
-        collector tick, so routing it through ``cache.get`` would re-hash
-        and re-stage; the ingestor manages cache membership itself via
-        ``put``/``invalidate`` and drains hand the archive straight here.
-        K-sharded archives (``repro.shard``) come through here too — the
-        engine routes any archive with ``is_sharded = True`` to the
-        per-shard pipeline, so sharding is invisible to the serve layer
-        beyond the staging step.  Bucketing, padding, and stats accounting
-        are identical to :meth:`serve`.
-        """
-        requests = list(requests)
-        if not requests:
-            return []
+        if isinstance(target, CandidateSet):
+            archive = self.cache.get(target, key=archive_key)
+        elif _is_archive(target):
+            if archive_key is not None:
+                raise ValueError(
+                    "archive_key only applies when serving a CandidateSet; "
+                    f"{type(target).__name__} already carries its key")
+            archive = target
+        else:
+            raise TypeError(
+                "serve() target must be a CandidateSet or a staged archive "
+                f"(DeviceArchive / rolling / snapshot / sharded), got "
+                f"{type(target).__name__}")
+        t0 = time.perf_counter()
         out: list[Recommendation] = []
         pos = 0
         for chunk_len, bucket in self.plan_chunks(len(requests)):
@@ -154,4 +191,14 @@ class BatchServer:
                 archive.host, chunk, pad_to=bucket, archive=archive))
             with self._stats_lock:
                 self.stats.record(chunk_len, bucket)
+        with self._stats_lock:
+            self.stats.latency.record(time.perf_counter() - t0)
         return out
+
+    def serve_archive(self, archive, requests) -> list[Recommendation]:
+        """Deprecated alias: ``serve`` now dispatches on the operand type."""
+        warnings.warn(
+            "BatchServer.serve_archive is deprecated; serve() dispatches on "
+            "the operand type — call serve(archive, requests)",
+            APIDeprecationWarning, stacklevel=2)
+        return self.serve(archive, requests)

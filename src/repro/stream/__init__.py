@@ -9,7 +9,7 @@ queries -> T3 archive -> scoring window -> recommendations — becomes:
         -> kernels.stats_update            (rank-1 Eq. 3 stats update, O(K))
         -> versioned key put/invalidate    (ArchiveCache never serves stale)
     AdmissionQueue.submit -> deadline/size-triggered drains
-        -> ArchiveSnapshot (version-pinned)  -> BatchServer.serve_archive
+        -> ArchiveSnapshot (version-pinned)  -> BatchServer.serve
 
 Nothing O(K*T) runs after the initial :meth:`LiveIngestor.prime`: appending
 a column to a staged K=32768, T=1008 archive is O(K) work — no host->device

@@ -12,6 +12,7 @@ batch routed through the cache can only ever hit the window it asked for.
 from __future__ import annotations
 
 from ..cloudsim.collector import DataCollector
+from ..core.config import EngineConfig
 from ..serve.archive import ArchiveCache
 from .rolling import RollingDeviceArchive
 
@@ -41,15 +42,26 @@ class LiveIngestor:
         loop — cache membership, versioned keys, ``poll`` — is unchanged.
     devices : sequence, optional
         Explicit device list for the shards (default: ``jax.devices()``).
+    config : EngineConfig, optional
+        When given (and ``cache`` is not), the ingestor builds its own
+        :class:`~repro.serve.ArchiveCache` from the config's
+        ``cache_capacity`` / ``cache_max_bytes`` — the same single source
+        of truth the engine and server draw from.  Passing both ``cache``
+        and ``config`` is an error (two sources of truth).
     """
 
     def __init__(self, collector: DataCollector, *, window: int,
                  cache: ArchiveCache | None = None, name: str | None = None,
-                 shards: int | None = None, devices=None):
+                 shards: int | None = None, devices=None,
+                 config: EngineConfig | None = None):
         if window < 1:
             raise ValueError("window must be >= 1")
         if shards is not None and shards < 1:
             raise ValueError("shards must be >= 1")
+        if config is not None:
+            if cache is not None:
+                raise TypeError("pass either cache= or config=, not both")
+            cache = config.build_cache()
         self.collector = collector
         self.window = window
         self.cache = cache

@@ -1,0 +1,203 @@
+"""The redesigned serving API surface (ISSUE 6): ``EngineConfig`` + the
+unified ``serve()``.
+
+Three contracts under test:
+
+1. **Config consolidation** — ``EngineConfig`` is the single source of
+   truth for ``pool_impl`` / ``score_impl`` / ``cache_capacity`` /
+   ``cache_max_bytes``, threaded through ``RecommendationEngine``,
+   ``BatchServer``, and ``LiveIngestor``.
+2. **Shim parity** — the deprecated loose kwargs still work, emit
+   ``APIDeprecationWarning``, and produce pools *bit-identical* to the
+   equivalent config (the shim maps, it does not fork behavior).
+3. **Unified dispatch** — one ``serve()`` accepts every operand the stack
+   produces (``CandidateSet``, ``DeviceArchive``, rolling archives and
+   their snapshots, K-sharded archives) and returns the same pools for the
+   same catalog regardless of which operand type carried it.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (APIDeprecationWarning, EngineConfig,
+                        RecommendationEngine, ResourceRequest,
+                        resolve_engine_config)
+from repro.core.config import resolve_engine_config as _resolve
+from repro.serve import ArchiveCache, BatchServer, DeviceArchive
+from repro.shard import ShardedArchive
+from repro.stream import RollingDeviceArchive
+
+from test_serve_batch import assert_equivalent, synth_candidates
+
+K = 72
+
+
+@pytest.fixture(scope="module")
+def cands():
+    return synth_candidates(seed=23, K=K)
+
+
+def _requests(cands):
+    return [
+        ResourceRequest(cpus=128.0),
+        ResourceRequest(memory_gb=256.0, weight=0.8),
+        ResourceRequest(cpus=64.0, regions=[str(cands.regions[0])]),
+        ResourceRequest(cpus=200.0, max_types=2),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# EngineConfig: validation, immutability, factories
+# ---------------------------------------------------------------------------
+
+def test_config_defaults_and_with():
+    cfg = EngineConfig()
+    assert (cfg.pool_impl, cfg.score_impl) == ("auto", "auto")
+    assert cfg.cache_capacity == 4 and cfg.cache_max_bytes is None
+    tiled = cfg.with_(score_impl="tiled", cache_capacity=2)
+    assert tiled.score_impl == "tiled" and tiled.cache_capacity == 2
+    assert cfg.score_impl == "auto"            # original untouched (frozen)
+    with pytest.raises(Exception):             # dataclass FrozenInstanceError
+        cfg.pool_impl = "dense"
+
+
+@pytest.mark.parametrize("bad", [
+    dict(pool_impl="fast"), dict(score_impl="gpu"),
+    dict(cache_capacity=0), dict(cache_max_bytes=0),
+])
+def test_config_validation(bad):
+    with pytest.raises(ValueError):
+        EngineConfig(**bad)
+
+
+def test_config_factories(cands):
+    cfg = EngineConfig(score_impl="tiled", cache_capacity=2, cache_max_bytes=1 << 30)
+    eng = cfg.build_engine()
+    assert isinstance(eng, RecommendationEngine)
+    assert eng.score_impl == "tiled" and eng.config is cfg
+    cache = cfg.build_cache()
+    assert isinstance(cache, ArchiveCache)
+    assert cache.capacity == 2 and cache.max_bytes == 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim: warns, maps, and does not fork behavior
+# ---------------------------------------------------------------------------
+
+def test_resolve_plain_passthrough():
+    cfg = EngineConfig(pool_impl="tiled")
+    assert _resolve(cfg) is cfg
+    assert _resolve(None) == EngineConfig()
+    assert resolve_engine_config is _resolve   # exported under both paths
+
+
+def test_resolve_rejects_both_sources():
+    with pytest.raises(TypeError, match="not both"):
+        _resolve(EngineConfig(), score_impl="tiled")
+
+
+def test_engine_legacy_kwargs_warn_and_match(cands):
+    reqs = _requests(cands)
+    with pytest.warns(APIDeprecationWarning, match="score_impl"):
+        old = RecommendationEngine(score_impl="tiled", pool_impl="dense")
+    new = RecommendationEngine(EngineConfig(score_impl="tiled",
+                                            pool_impl="dense"))
+    assert old.config == new.config
+    for a, b in zip(old.recommend_batch(cands, reqs),
+                    new.recommend_batch(cands, reqs)):
+        assert_equivalent(a, b)                # bit-identical pools
+
+
+def test_server_legacy_kwargs_warn_and_match(cands):
+    with pytest.warns(APIDeprecationWarning, match="cache_capacity"):
+        old = BatchServer(bucket_sizes=(1, 8), cache_capacity=2)
+    new = BatchServer(bucket_sizes=(1, 8),
+                      config=EngineConfig(cache_capacity=2))
+    assert old.config == new.config
+    assert old.cache.capacity == new.cache.capacity == 2
+    reqs = _requests(cands)
+    for a, b in zip(old.serve(cands, reqs), new.serve(cands, reqs)):
+        assert_equivalent(a, b)
+
+
+def test_server_config_threads_cache_budgets():
+    srv = BatchServer(config=EngineConfig(cache_capacity=3,
+                                          cache_max_bytes=1 << 20))
+    assert srv.cache.capacity == 3 and srv.cache.max_bytes == 1 << 20
+    assert srv.engine.config is srv.config
+
+
+def test_ingestor_config_builds_cache():
+    from repro.stream import LiveIngestor
+    from test_stream import _collector
+    col = _collector(seed=9, cycles=4)
+    ing = LiveIngestor(col, window=4,
+                       config=EngineConfig(cache_capacity=2))
+    assert ing.cache is not None and ing.cache.capacity == 2
+    with pytest.raises(TypeError, match="not both"):
+        LiveIngestor(col, window=4, cache=ArchiveCache(capacity=1),
+                     config=EngineConfig())
+
+
+# ---------------------------------------------------------------------------
+# Unified serve(): one entry point, every operand type
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def server():
+    return BatchServer(bucket_sizes=(1, 4, 8),
+                       config=EngineConfig(cache_capacity=4))
+
+
+def test_serve_dispatches_every_operand(cands, server):
+    reqs = _requests(cands)
+    base = server.serve(cands, reqs)                     # CandidateSet path
+
+    staged = DeviceArchive.stage(cands)                        # pre-staged path
+    rolling = RollingDeviceArchive(cands, capacity=cands.t3.shape[1])
+    operands = {
+        "device": staged,
+        "rolling": rolling,
+        "snapshot": rolling.snapshot(),
+        "sharded": ShardedArchive.stage(cands, n_shards=2),
+    }
+    for name, op in operands.items():
+        out = server.serve(op, reqs)
+        for a, b in zip(base, out):
+            assert_equivalent(a, b)
+
+
+def test_serve_rejects_unknown_operand(server, cands):
+    with pytest.raises(TypeError, match="serve\\(\\) target"):
+        server.serve(object(), _requests(cands))
+    with pytest.raises(TypeError):
+        server.serve(np.arange(4), _requests(cands))
+
+
+def test_serve_archive_key_only_for_candidate_sets(server, cands):
+    arch = DeviceArchive.stage(cands)
+    with pytest.raises(ValueError, match="archive_key"):
+        server.serve(arch, _requests(cands), archive_key="x")
+    # ...but is honored on the CandidateSet path
+    out = server.serve(cands, _requests(cands)[:1], archive_key="pinned")
+    assert len(out) == 1 and "pinned" in server.cache._entries
+
+
+def test_serve_archive_alias_warns_and_matches(cands, server):
+    reqs = _requests(cands)
+    arch = DeviceArchive.stage(cands)
+    base = server.serve(arch, reqs)
+    with pytest.warns(APIDeprecationWarning, match="serve_archive"):
+        alias = server.serve_archive(arch, reqs)
+    for a, b in zip(base, alias):
+        assert_equivalent(a, b)
+
+
+def test_request_signature_discriminates_and_normalizes():
+    a = ResourceRequest(cpus=64.0, regions=["us-east-1", "eu-west-1"])
+    b = ResourceRequest(cpus=64.0, regions=["eu-west-1", "us-east-1"])
+    c = ResourceRequest(cpus=64.0, regions=["eu-west-1"])
+    assert a.signature() == b.signature()      # order-insensitive filters
+    assert a.signature() != c.signature()
+    assert (ResourceRequest(cpus=64.0).signature()
+            != ResourceRequest(memory_gb=64.0).signature())
+    hash(a.signature())                        # usable as a memo key

@@ -244,7 +244,7 @@ def test_engine_tiled_matches_sequential():
     """Pool bit-identical, scores ulp-tight — the recommend_batch contract,
     now under ``score_impl="tiled"`` with mixed filters (dedup exercised)."""
     cands = _synth_candidates(23, K=70)
-    eng = engine_lib.RecommendationEngine(score_impl="tiled")
+    eng = engine_lib.RecommendationEngine(engine_lib.EngineConfig(score_impl="tiled"))
     reqs = [ResourceRequest(cpus=128.0),
             ResourceRequest(memory_gb=256.0, weight=0.8),
             ResourceRequest(cpus=96.0, weight=0.0, lam=0.3),
@@ -269,7 +269,7 @@ def test_engine_archive_stats_cache_is_bitwise():
     """Cached-stats batches must equal inline-stats batches bit-for-bit."""
     from repro.serve import DeviceArchive
     cands = _synth_candidates(29, K=40)
-    eng = engine_lib.RecommendationEngine(score_impl="tiled")
+    eng = engine_lib.RecommendationEngine(engine_lib.EngineConfig(score_impl="tiled"))
     reqs = [ResourceRequest(cpus=100.0), ResourceRequest(memory_gb=64.0)]
     arch = DeviceArchive.stage(cands)
     plain = eng.recommend_batch(cands, reqs)

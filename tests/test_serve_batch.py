@@ -11,7 +11,8 @@ bucketing, batch size — must never change any result bit.
 import numpy as np
 import pytest
 
-from repro.core import RecommendationEngine, RequestBatch, ResourceRequest
+from repro.core import (EngineConfig, RecommendationEngine, RequestBatch,
+                        ResourceRequest)
 from repro.core.types import CandidateSet
 from repro.serve import ArchiveCache, BatchServer, DeviceArchive
 
@@ -217,7 +218,8 @@ def test_request_batch_padding_shape(cands):
 # ---------------------------------------------------------------------------
 
 def test_batch_server_matches_engine(cands, engine):
-    srv = BatchServer(engine, bucket_sizes=(1, 8, 64), cache_capacity=2)
+    srv = BatchServer(engine, bucket_sizes=(1, 8, 64),
+                      config=EngineConfig(cache_capacity=2))
     rng = np.random.default_rng(5)
     reqs = [ResourceRequest(cpus=float(rng.integers(8, 800)),
                             weight=float(np.round(rng.random(), 2)))

@@ -25,7 +25,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.core import RecommendationEngine, ResourceRequest, scoring
+from repro.core import EngineConfig, RecommendationEngine, ResourceRequest, scoring
 from repro.serve import ArchiveCache, BatchServer, DeviceArchive
 from repro.shard import (ShardedArchive, ShardedRollingArchive,
                          ShardedSnapshot, shard_bounds)
@@ -46,7 +46,7 @@ def cands():
 def engine():
     # tiled is what sharded archives serve (dense_capable = False); pin it
     # on the baseline too so the comparison is exactly the contract's.
-    return RecommendationEngine(score_impl="tiled", pool_impl="tiled")
+    return RecommendationEngine(EngineConfig(score_impl="tiled", pool_impl="tiled"))
 
 
 def _assert_bitwise(a, b):
@@ -321,7 +321,7 @@ def test_sharded_ingestor_loop_matches_cold_restage(engine):
         stale = arch.key
         ing.poll()
         assert arch.key in cache and stale not in cache
-        live = server.serve_archive(arch, reqs)
+        live = server.serve(arch, reqs)
         cold_set = col.to_candidate_set(window=WINDOW)
         np.testing.assert_array_equal(
             arch.materialize(), np.asarray(cold_set.t3, np.float32))

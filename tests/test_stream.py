@@ -11,7 +11,7 @@ import pytest
 
 from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
                             SpotMarket, SPSQueryService)
-from repro.core import RecommendationEngine, ResourceRequest
+from repro.core import EngineConfig, RecommendationEngine, ResourceRequest
 from repro.core import scoring
 from repro.serve import ArchiveCache, BatchServer, DeviceArchive
 from repro.stream import (AdmissionQueue, ArchiveSnapshot, LiveIngestor,
@@ -117,7 +117,7 @@ def test_rolling_archive_serves_like_cold_restage(score_impl):
     """recommend_batch(rolling archive) == cold re-stage, both impls."""
     cands = synth_candidates(seed=5, K=48, T=WINDOW)
     arch = RollingDeviceArchive(cands)
-    engine = RecommendationEngine(score_impl=score_impl, pool_impl="auto")
+    engine = RecommendationEngine(EngineConfig(score_impl=score_impl))
     rng = np.random.default_rng(1)
     reqs = _requests(cands)
     for _ in range(5):
@@ -136,7 +136,7 @@ def test_snapshot_survives_version_bumps():
     (donating its ring away) while the snapshot keeps serving."""
     cands = synth_candidates(seed=6, K=40, T=WINDOW)
     arch = RollingDeviceArchive(cands, name="pin")
-    engine = RecommendationEngine(score_impl="tiled")
+    engine = RecommendationEngine(EngineConfig(score_impl="tiled"))
     reqs = _requests(cands)
     rng = np.random.default_rng(2)
     arch.append(rng.uniform(0, 50, 40))
@@ -199,7 +199,7 @@ def test_ingestor_loop_bit_identical_to_cold_restaging():
     cache = ArchiveCache(capacity=4)
     ing = LiveIngestor(col, window=WINDOW, cache=cache, name="live")
     arch = ing.prime()
-    engine = RecommendationEngine(score_impl="tiled", pool_impl="auto")
+    engine = RecommendationEngine(EngineConfig(score_impl="tiled"))
     server = BatchServer(engine, bucket_sizes=(1, 4, 8))
     reqs = _requests(col.to_candidate_set(window=WINDOW))
     for cycle in range(6):
@@ -209,7 +209,7 @@ def test_ingestor_loop_bit_identical_to_cold_restaging():
         ing.poll()
         assert ing.lag == 0
         assert arch.key in cache and stale not in cache
-        live = server.serve_archive(arch, reqs)
+        live = server.serve(arch, reqs)
         cold_set = col.to_candidate_set(window=WINDOW)
         np.testing.assert_array_equal(
             arch.materialize(), np.asarray(cold_set.t3, np.float32))
@@ -263,7 +263,7 @@ def admission():
     col = _collector()
     ing = LiveIngestor(col, window=WINDOW, name="adm")
     ing.prime()
-    server = BatchServer(RecommendationEngine(score_impl="tiled"),
+    server = BatchServer(RecommendationEngine(EngineConfig(score_impl="tiled")),
                          bucket_sizes=(1, 4, 8))
     clock = FakeClock()
     q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=1.0,
@@ -427,7 +427,7 @@ def test_threaded_admission_resolves_every_ticket_exactly_once(monkeypatch):
     col = _collector()
     ing = LiveIngestor(col, window=WINDOW, name="mt")
     ing.prime()
-    server = BatchServer(RecommendationEngine(score_impl="tiled"),
+    server = BatchServer(RecommendationEngine(EngineConfig(score_impl="tiled")),
                          bucket_sizes=(1, 4, 8))
     q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.005).start()
     n_threads, per_thread = 4, 6
@@ -470,7 +470,7 @@ def test_admission_background_worker_smoke():
     col = _collector()
     ing = LiveIngestor(col, window=WINDOW, name="bg")
     ing.prime()
-    server = BatchServer(RecommendationEngine(score_impl="tiled"),
+    server = BatchServer(RecommendationEngine(EngineConfig(score_impl="tiled")),
                          bucket_sizes=(1, 4, 8))
     q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.01).start()
     try:
