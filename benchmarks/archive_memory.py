@@ -1,0 +1,277 @@
+"""Archive memory tiers: resident bytes/candidate and ingest cost per tier.
+
+The quantized archive tier exists to push the per-device candidate fan-out
+past 10^6: storing the (K, T) T3 ring as int8 codes with one float32 scale
+per candidate cuts the dominant resident allocation ~4x (bf16: ~2x) while
+the fused dequantize-and-update kernel keeps the O(K) per-tick cost.  This
+benchmark measures, per (K, precision) pair at the paper's scoring window
+(T = 1008):
+
+- ``bytes_per_cand`` — every resident device byte of a serve-ready
+  ``RollingDeviceArchive`` (ring + catalog + moment pairs + scale + memoised
+  statistics), divided by K;
+- ``tick_us`` — one streamed collector tick (host->device column, quantize,
+  donated ring write, rank-1 stats update), serve-ready when it returns;
+
+and applies the acceptance gate: at K >= 262144 the int8 tier must hold
+>= 3.5x fewer bytes per candidate than float32 with per-tick ingest no
+worse.  Every checked pair also verifies the error-bound contract on a
+fixed 5-tick replay: decoded ring within ``scale / 2`` of the exact
+float32 window per sample, streamed statistics at float32-ulp agreement
+with ``candidate_stats`` of the decoded window, and a zero clip counter.
+
+Modes::
+
+    python -m benchmarks.archive_memory            # full sweep (K to 2^20),
+        # writes the committed benchmarks/BENCH_memory.json artifact
+    python -m benchmarks.archive_memory --smoke    # small-K sweep, T = 1008
+    python -m benchmarks.archive_memory --smoke --check benchmarks/BENCH_memory.json
+        # CI lane: fail on a violated error bound, a memory ratio below the
+        # gate, a slower int8 tick, or regression vs the committed artifact
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.spotvista import CONFIG
+from repro.core import scoring
+from repro.core.types import CandidateSet
+from repro.parallel import compression
+from repro.stream import RollingDeviceArchive
+
+from ._world import bench_best, row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_memory.json"
+
+T_WINDOW = int(CONFIG.window_days * 24 * 60 / CONFIG.collect_period_min)
+TIERS = compression.ARCHIVE_PRECISIONS          # ("float32", "bfloat16", "int8")
+K_SWEEP = (65536, 262144, 1048576)              # past 10^6 candidates
+K_SMOKE = (1024, 4096)
+K_ACCEPT = 262144
+# Smoke pairs keep the full T = 1008 window: the bytes/candidate ratio is
+# dominated by ring bytes (~T per tier-dtype) vs per-candidate fixed costs
+# (moment pairs + scale), so a short window would understate the ratio the
+# gate is about.
+LOOP_SECONDS = 0.4
+HEADROOM = 1.1
+MEM_RATIO_GATE = 3.5
+TICK_TOLERANCE = 1.25           # int8 tick may not exceed f32 tick by >25%
+REGRESSION_TOLERANCE = 0.10     # vs the committed ratio (deterministic-ish)
+
+STAT_RTOL = 1e-5
+STAT_ATOL = 1e-4
+
+
+def _candidates(K: int, T: int, seed: int = 0) -> CandidateSet:
+    rng = np.random.default_rng(seed)
+    fams = rng.choice(["m5", "c5", "r5", "t3"], K)
+    return CandidateSet(
+        names=np.array([f"{fams[i]}.x{i}" for i in range(K)]),
+        regions=rng.choice(["us-east-1", "eu-west-1"], K),
+        azs=rng.choice(["a", "b", "c"], K),
+        families=fams,
+        categories=rng.choice(["general", "compute", "memory"], K),
+        vcpus=rng.choice([2, 4, 8, 16, 32, 64, 96], K).astype(np.float64),
+        memory_gb=rng.choice([4, 8, 16, 64, 128, 384], K).astype(np.float64),
+        prices=rng.uniform(0.01, 5.0, K),
+        # float32 draws: at K = 2^20 the host window alone is 4 GB — the
+        # benchmark measures device-resident archive bytes, not host copies
+        t3=(rng.random((K, T), dtype=np.float32) * 50.0),
+    )
+
+
+def _measure(cands: CandidateSet, precision: str) -> dict:
+    K, T = cands.t3.shape
+    arch = RollingDeviceArchive(cands, name=f"mem{K}x{T}",
+                                precision=precision, headroom=HEADROOM)
+    rng = np.random.default_rng(1)
+    cols = [rng.uniform(0.0, 50.0, K) for _ in range(8)]
+    i = [0]
+
+    def tick():
+        arch.append(cols[i[0] % len(cols)])
+        i[0] += 1
+        jax.block_until_ready(arch.score_stats())
+
+    t_tick = bench_best(tick, budget=LOOP_SECONDS)
+    nbytes = arch.nbytes            # serve-ready: ring + stats memoised
+    return {"K": K, "T": T, "precision": precision, "nbytes": nbytes,
+            "bytes_per_cand": nbytes / K, "tick_us": t_tick * 1e6,
+            "ticks_per_s": 1.0 / t_tick,
+            "clipped": int(getattr(arch, "clipped_samples", 0))}
+
+
+def _check_error_bound(K: int, T: int, precision: str) -> list[str]:
+    """Fixed 5-tick replay of the tier contract; returns failure strings."""
+    cands = _candidates(K, T, seed=3)
+    arch = RollingDeviceArchive(cands, name=f"chk{K}x{T}",
+                                precision=precision, headroom=HEADROOM)
+    rng = np.random.default_rng(4)
+    win = np.asarray(cands.t3, np.float32)
+    for _ in range(5):
+        col = rng.uniform(0.0, 50.0, K)
+        arch.append(col)
+        win = np.concatenate([win[:, 1:], col[:, None].astype(np.float32)],
+                             axis=1)
+    fails = []
+    if arch.clipped_samples != 0:
+        fails.append(f"{precision}@K={K}: {arch.clipped_samples} clipped "
+                     f"samples at headroom {HEADROOM}")
+    deq = arch.materialize()
+    step = (np.asarray(arch.scale) if precision == "int8"
+            else compression.candidate_scales(win, precision))
+    err = np.abs(deq - win)
+    if not (err <= 0.5 * step[:, None] * (1 + 1e-5)).all():
+        fails.append(f"{precision}@K={K}: decoded ring drifted past scale/2 "
+                     f"(max {err.max():.3g})")
+    ref = scoring.candidate_stats(deq)
+    for name, a, b in zip(("area", "slope", "std"), arch.score_stats(), ref):
+        if not np.allclose(np.asarray(a), np.asarray(b),
+                           rtol=STAT_RTOL, atol=STAT_ATOL):
+            fails.append(f"{precision}@K={K}: streamed {name} diverged from "
+                         f"candidate_stats of the decoded window")
+    return fails
+
+
+def _gate(by_tier: dict[str, dict]) -> dict:
+    f32, q = by_tier["float32"], by_tier["int8"]
+    ratio = f32["bytes_per_cand"] / q["bytes_per_cand"]
+    tick_ratio = q["tick_us"] / f32["tick_us"]
+    return {"K": q["K"], "T": q["T"], "mem_ratio_int8": ratio,
+            "ge_3_5x": ratio >= MEM_RATIO_GATE,
+            "tick_ratio_int8": tick_ratio,
+            "tick_ok": tick_ratio <= TICK_TOLERANCE,
+            "bf16_ratio": f32["bytes_per_cand"]
+            / by_tier["bfloat16"]["bytes_per_cand"]}
+
+
+def _sweep(Ks) -> list[dict]:
+    out = []
+    for K in Ks:
+        cands = _candidates(K, T_WINDOW)
+        for precision in TIERS:
+            out.append(_measure(cands, precision))
+        del cands
+    return out
+
+
+def _rows(pairs) -> list[str]:
+    return [row(f"mem/K{r['K']}_T{r['T']}_{r['precision']}", r["tick_us"],
+                bytes_per_cand=round(r["bytes_per_cand"], 1),
+                mib=round(r["nbytes"] / 2 ** 20, 1),
+                ticks_per_s=round(r["ticks_per_s"], 1),
+                clipped=r["clipped"])
+            for r in pairs]
+
+
+def _by_tier(pairs, K: int) -> dict[str, dict]:
+    return {r["precision"]: r for r in pairs if r["K"] == K}
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size sweep + the tier contract."""
+    fails = [f for p in ("int8", "bfloat16")
+             for f in _check_error_bound(K_SMOKE[0], T_WINDOW, p)]
+    if fails:
+        raise AssertionError("; ".join(fails))
+    pairs = _sweep(K_SMOKE)
+    gate = _gate(_by_tier(pairs, K_SMOKE[-1]))
+    if not gate["ge_3_5x"]:
+        raise AssertionError(
+            f"int8 memory ratio {gate['mem_ratio_int8']:.2f}x below "
+            f"{MEM_RATIO_GATE}x at K={gate['K']}")
+    return _rows(pairs)
+
+
+def _full() -> dict:
+    pairs = _sweep(K_SWEEP)
+    smoke = _sweep((K_SMOKE[-1],))
+    return {
+        "meta": {"backend": jax.default_backend(), "T_window": T_WINDOW,
+                 "headroom": HEADROOM, "mem_ratio_gate": MEM_RATIO_GATE,
+                 "tick_tolerance": TICK_TOLERANCE},
+        "sweep": pairs,
+        "accept": _gate(_by_tier(pairs, K_ACCEPT)),
+        "smoke": _gate(_by_tier(smoke, K_SMOKE[-1])),
+    }
+
+
+def _check(artifact: Path) -> int:
+    committed = json.loads(artifact.read_text())
+    if not committed["accept"]["ge_3_5x"] or not committed["accept"]["tick_ok"]:
+        print("# FAIL: committed artifact does not clear the acceptance "
+              "gate", file=sys.stderr)
+        return 1
+    fails = [f for p in ("int8", "bfloat16")
+             for f in _check_error_bound(K_SMOKE[0], T_WINDOW, p)]
+    for f in fails:
+        print(f"# FAIL: {f}", file=sys.stderr)
+    if fails:
+        return 1
+    pairs = _sweep((K_SMOKE[-1],))
+    gate = _gate(_by_tier(pairs, K_SMOKE[-1]))
+    floor = (1.0 - REGRESSION_TOLERANCE) * committed["smoke"]["mem_ratio_int8"]
+    print(row(f"mem/check_K{gate['K']}_T{gate['T']}",
+              _by_tier(pairs, K_SMOKE[-1])["int8"]["tick_us"],
+              mem_ratio=round(gate["mem_ratio_int8"], 2),
+              committed=round(committed["smoke"]["mem_ratio_int8"], 2),
+              floor=round(floor, 2),
+              tick_ratio=round(gate["tick_ratio_int8"], 2)))
+    if not gate["ge_3_5x"]:
+        print(f"# FAIL: int8 memory ratio {gate['mem_ratio_int8']:.2f}x "
+              f"below the {MEM_RATIO_GATE}x gate", file=sys.stderr)
+        return 1
+    if gate["mem_ratio_int8"] < floor:
+        print(f"# FAIL: int8 memory ratio {gate['mem_ratio_int8']:.2f}x "
+              f"regressed >10% vs committed "
+              f"{committed['smoke']['mem_ratio_int8']:.2f}x", file=sys.stderr)
+        return 1
+    if not gate["tick_ok"]:
+        print(f"# FAIL: int8 tick {gate['tick_ratio_int8']:.2f}x slower "
+              f"than float32 (tolerance {TICK_TOLERANCE}x)", file=sys.stderr)
+        return 1
+    print("# archive memory check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small-K sweep only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_memory.json "
+                         "and exit non-zero on divergence/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full sweep")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    print("name,us_per_call,derived")
+    if args.smoke:
+        for line in run():
+            print(line)
+        return
+    payload = _full()
+    for line in _rows(payload["sweep"]):
+        print(line)
+    acc = payload["accept"]
+    print(f"# accept K={acc['K']}: mem ratio {acc['mem_ratio_int8']:.2f}x "
+          f"(gate {MEM_RATIO_GATE}x), tick ratio "
+          f"{acc['tick_ratio_int8']:.2f}x", file=sys.stderr)
+    if not acc["ge_3_5x"] or not acc["tick_ok"]:
+        raise SystemExit("# FAIL: acceptance gate not cleared")
+    args.out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,6 +18,9 @@ plus the acceptance pair: per-tick ingest at (K=32768, T=1008) must clear a
 cross-checks the incrementally-maintained statistics against a fresh
 ``candidate_stats`` of the materialized window (float32-ulp budget) and the
 resulting ``recommend_batch`` pools bit-for-bit against a cold re-stage.
+The quantized archive tiers (bf16 / int8 rings, ``benchmarks.archive_memory``
+for the bytes side) get their own rows at the accept width — same parity
+checks, with the materialized window being the *decoded* ring.
 
 Modes::
 
@@ -113,10 +116,11 @@ def _check_parity(arch: RollingDeviceArchive, reqs) -> bool:
     return True
 
 
-def _measure_pair(K: int, T: int) -> dict:
+def _measure_pair(K: int, T: int, precision: str = "float32") -> dict:
     cands = _candidates(K, T)
     rng = np.random.default_rng(1)
-    arch = RollingDeviceArchive(cands, name=f"bench{K}x{T}")
+    arch = RollingDeviceArchive(cands, name=f"bench{K}x{T}{precision}",
+                                precision=precision, headroom=1.1)
     cols = [rng.uniform(0.0, 50.0, K) for _ in range(8)]
     i = [0]
 
@@ -126,14 +130,17 @@ def _measure_pair(K: int, T: int) -> dict:
         jax.block_until_ready(arch.score_stats())
 
     def stage():
-        staged = DeviceArchive.stage(cands, key="bench")  # hash excluded
+        # hash excluded; quantized tiers pay their honest staging cost
+        # (per-candidate scales + window encode) here
+        staged = DeviceArchive.stage(cands, key="bench", precision=precision)
         jax.block_until_ready(staged.score_stats())
 
     t_tick = _bench(tick)
     t_stage = _bench(stage)
     reqs = [ResourceRequest(cpus=256.0),
             ResourceRequest(memory_gb=512.0, weight=0.7)]
-    return {"K": K, "T": T, "parity": _check_parity(arch, reqs),
+    return {"K": K, "T": T, "precision": precision,
+            "parity": _check_parity(arch, reqs),
             "tick_us": t_tick * 1e6, "stage_us": t_stage * 1e6,
             "ticks_per_s": 1.0 / t_tick, "speedup": t_stage / t_tick}
 
@@ -156,7 +163,10 @@ def _admission_smoke() -> bool:
 
 
 def _rows(pairs) -> list[str]:
-    return [row(f"ingest/K{r['K']}_T{r['T']}", r["tick_us"],
+    return [row(f"ingest/K{r['K']}_T{r['T']}"
+                + ("" if r.get("precision", "float32") == "float32"
+                   else f"_{r['precision']}"),
+                r["tick_us"],
                 ticks_per_s=round(r["ticks_per_s"], 1),
                 stage_us=round(r["stage_us"], 1),
                 speedup=round(r["speedup"], 2), parity=r["parity"])
@@ -164,8 +174,10 @@ def _rows(pairs) -> list[str]:
 
 
 def run() -> list[str]:
-    """benchmarks.run entry: smoke-size sweep."""
+    """benchmarks.run entry: smoke-size sweep + quantized-tier rows."""
     pairs = [_measure_pair(K, T_SMOKE) for K in K_SMOKE]
+    pairs += [_measure_pair(SMOKE_PAIR[0], T_SMOKE, p)
+              for p in ("bfloat16", "int8")]
     if not all(r["parity"] for r in pairs):
         raise AssertionError("streamed stats/pools diverged from cold restage")
     if not _admission_smoke():
@@ -175,12 +187,15 @@ def run() -> list[str]:
 
 def _full() -> dict:
     pairs = [_measure_pair(K, T_WINDOW) for K in K_SWEEP]
+    tiers = [_measure_pair(ACCEPT_PAIR[0], T_WINDOW, p)
+             for p in ("bfloat16", "int8")]
     smoke = _measure_pair(*SMOKE_PAIR)
     accept = next(r for r in pairs if r["K"] == ACCEPT_PAIR[0])
     return {
         "meta": {"backend": jax.default_backend(), "T_window": T_WINDOW,
                  "T_smoke": T_SMOKE},
         "sweep": pairs,
+        "tiers": tiers,
         "accept": {"K": accept["K"], "T": accept["T"],
                    "tick_us": accept["tick_us"],
                    "stage_us": accept["stage_us"],
@@ -240,9 +255,9 @@ def main() -> None:
             print(line)
         return
     payload = _full()
-    for line in _rows(payload["sweep"]):
+    for line in _rows(payload["sweep"] + payload["tiers"]):
         print(line)
-    if not all(r["parity"] for r in payload["sweep"]):
+    if not all(r["parity"] for r in payload["sweep"] + payload["tiers"]):
         raise SystemExit("# FAIL: streamed stats/pools diverged")
     args.out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {args.out}", file=sys.stderr)

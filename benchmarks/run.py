@@ -27,6 +27,7 @@ MODULES = [
     "pool_scan_scaling",
     "scoring_scaling",
     "ingest_throughput",
+    "archive_memory",
     "shard_scaling",
     "latency_slo",
     "kernels_micro",

@@ -36,6 +36,13 @@ class CollectorConfig:
     #: of rebuilding the full python-list matrix, and ``column(i)`` (the
     #: live-ingestion feed) is an O(K) slice.  None disables the ring.
     ring_capacity: int | None = None
+    #: storage dtype of the host ring.  T3 values are small integer node
+    #: counts (``<= t_max``), so "float32" or "int16" hold them exactly at
+    #: half / a quarter of the float64 footprint — at SpotLake-scale K the
+    #: host ring is the collector's dominant allocation.  ``column`` /
+    #: ``to_candidate_set`` still hand out float64, so every consumer sees
+    #: bit-identical values regardless of the ring dtype.
+    ring_dtype: str = "float64"
 
 
 class DataCollector:
@@ -58,7 +65,8 @@ class DataCollector:
         self._tick = 0
         cap = self.cfg.ring_capacity
         # preallocated (K, cap) host ring of the last `cap` T3 columns
-        self._ring = (np.zeros((len(self.targets), cap), np.float64)
+        self._ring = (np.zeros((len(self.targets), cap),
+                               np.dtype(self.cfg.ring_dtype))
                       if cap else None)
         self._ring_len = 0
         self._static_cols = None     # cached catalog columns (static per run)
@@ -124,7 +132,7 @@ class DataCollector:
             raise IndexError(f"tick {i} not collected yet (have {self._tick})")
         i %= self._tick
         if self._ring is not None and i >= self._tick - self._ring_len:
-            return self._ring[:, i % self._ring.shape[1]].copy()
+            return self._ring[:, i % self._ring.shape[1]].astype(np.float64)
         return np.array([self.t3_archive[t][i] for t in self.targets],
                         np.float64)
 
@@ -162,7 +170,7 @@ class DataCollector:
         if self._ring is not None and 0 < w_eff <= self._ring_len:
             cap = self._ring.shape[1]
             idx = (np.arange(self._tick - w_eff, self._tick)) % cap
-            t3 = self._ring[:, idx]
+            t3 = self._ring[:, idx].astype(np.float64)
         else:
             t3 = np.stack([np.asarray(self.t3_archive[t], np.float64)[
                 self._tick - w_eff:] for t in self.targets])

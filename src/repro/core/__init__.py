@@ -9,6 +9,7 @@
 - mstl      : MSTL-lite decomposition, seasonal strength, Bai-Perron (§6.2)
 - baselines : SpotVerse / SpotFleet / naive single-point (§6.4)
 - engine    : recommendation facade (§4, Fig. 3)
+- quantized : quantized-archive-tier error bounds + pool-parity contract
 """
 from .types import (  # noqa: F401
     CandidateSet, Recommendation, RequestBatch, ResourceRequest,
@@ -31,3 +32,7 @@ from .tstp import TSTPResult, find_transition_points, full_scan  # noqa: F401
 from .entropy import empirical_entropy, max_entropy  # noqa: F401
 from .survival import kaplan_meier, cox_ph, KaplanMeier, CoxPHResult  # noqa: F401
 from .mstl import mstl_decompose, seasonal_strength, bai_perron  # noqa: F401
+from .quantized import (  # noqa: F401
+    check_pool_parity, pool_decision_margin, pools_identical,
+    QuantizedParity, score_bound, stat_bounds,
+)

@@ -54,6 +54,20 @@ class EngineConfig:
         Entry count of the serve layer's staged-archive LRU.
     cache_max_bytes : int | None
         Optional device-byte budget for the same LRU (``None`` = uncapped).
+    archive_precision : str
+        Storage tier of staged/rolling T3 windows: ``"float32"`` (exact
+        baseline), ``"bfloat16"`` (2x fewer window bytes, scale-free cast),
+        or ``"int8"`` (4x fewer bytes, per-candidate float32 scale; fused
+        dequantize-and-update ingest).  Quantised tiers perturb each stored
+        sample by at most half the per-candidate step; ``repro.core.
+        quantized`` derives the resulting score-drift budget and the parity
+        contract (pools bit-identical unless a tie inside the bound is
+        flagged).  The tier is baked into archive cache keys, so mixing
+        precisions across layers cannot alias.
+    archive_headroom : float
+        int8 clip slack: the per-candidate step is widened by this factor so
+        live columns may exceed the seed window's range without clipping
+        (at proportionally coarser resolution).  ``>= 1.0``.
 
     The dataclass is frozen so a config can be shared across threads and
     layers without defensive copies; derive variants with :meth:`with_`.
@@ -63,6 +77,8 @@ class EngineConfig:
     score_impl: str = "auto"
     cache_capacity: int = 4
     cache_max_bytes: int | None = None
+    archive_precision: str = "float32"
+    archive_headroom: float = 1.0
 
     def __post_init__(self):
         if self.pool_impl not in pool_lib.POOL_IMPLS:
@@ -75,6 +91,10 @@ class EngineConfig:
             raise ValueError("cache_capacity must be >= 1")
         if self.cache_max_bytes is not None and self.cache_max_bytes < 1:
             raise ValueError("cache_max_bytes must be >= 1")
+        from ..parallel import compression
+        compression.resolve_precision(self.archive_precision)
+        if self.archive_headroom < 1.0:
+            raise ValueError("archive_headroom must be >= 1.0")
 
     def with_(self, **changes) -> "EngineConfig":
         """A copy with ``changes`` applied (validation re-runs)."""
@@ -89,10 +109,13 @@ class EngineConfig:
         return RecommendationEngine(config=self)
 
     def build_cache(self):
-        """An :class:`~repro.serve.ArchiveCache` on this config's budgets."""
+        """An :class:`~repro.serve.ArchiveCache` on this config's budgets,
+        staging misses at this config's ``archive_precision``."""
         from ..serve.archive import ArchiveCache
         return ArchiveCache(capacity=self.cache_capacity,
-                            max_bytes=self.cache_max_bytes)
+                            max_bytes=self.cache_max_bytes,
+                            precision=self.archive_precision,
+                            headroom=self.archive_headroom)
 
 
 def resolve_engine_config(config: EngineConfig | None,

@@ -266,6 +266,18 @@ class RecommendationEngine:
         archive (``repro.shard``, ``is_sharded = True``) routes to the
         per-shard pipeline instead of the single-device fused dispatch; its
         pools are bit-identical to the single-device tiled path.
+
+        Quantised archives (``EngineConfig.archive_precision`` = "bfloat16"
+        / "int8", staged via ``DeviceArchive.stage(precision=...)`` or a
+        quantised rolling ring) serve through the same paths with one
+        semantic difference: their T3 samples carry a bounded storage error
+        (at most half the per-candidate quantisation step), so combined
+        scores may drift within the budget ``repro.core.quantized``
+        derives — and the recommended pool is bit-identical to the float32
+        tier's whenever every Algorithm 1 decision margin exceeds that
+        budget (ties inside it are flagged by the parity tooling, not
+        hidden).  Catalog columns — prices, vcpus, memory — are never
+        quantised, so hourly-cost accounting is exact on every tier.
         """
         requests = list(requests)
         if not requests:

@@ -81,7 +81,7 @@ class StreamMoments(NamedTuple):
         return sum(int(a.nbytes) for a in self)
 
 
-def moments_from_window(t3) -> StreamMoments:
+def moments_from_window(t3, *, scale=None, chunk: int = 65536) -> StreamMoments:
     """Exact cold-start moments of a host (K, T) window.
 
     The float64 host reductions are split into float32 ``(hi, lo)`` pairs, so
@@ -89,21 +89,48 @@ def moments_from_window(t3) -> StreamMoments:
     the same invariant the compensated updates maintain afterwards.  The
     centering point ``ref`` is frozen at the (float32-rounded) seed-window
     mean, which keeps both operands of the variance subtraction O(var).
+
+    ``scale`` seeds an int8 archive tier: ``t3`` holds stored codes and each
+    chunk is decoded ``code.astype(f32) * scale`` — bitwise the
+    ``compression.dequantize_window`` multiply — before the reductions, so
+    the seeded moments are exact over the tier's ground truth (the
+    dequantized window).  bf16 windows need no scale: the bf16 -> float64
+    cast is exact.
+
+    Rows are reduced in ``chunk``-sized blocks (per-row math — block size
+    cannot change any value), so seeding a K=10^6 archive allocates an
+    O(chunk * T) float64 temporary instead of a second full-window copy.
     """
-    t3 = np.asarray(t3, np.float64)
-    T = t3.shape[-1]
+    t3 = np.asarray(t3)
+    if scale is not None:
+        scale = np.asarray(scale, np.float32)
+    K, T = t3.shape
     idx = np.arange(T, dtype=np.float64)
+    s0 = np.empty(K, np.float64)
+    s1 = np.empty(K, np.float64)
+    q = np.empty(K, np.float64)
+    ref32 = np.empty(K, np.float32)
+    for a in range(0, K, chunk):
+        b = min(a + chunk, K)
+        if scale is not None:
+            blk = (t3[a:b].astype(np.float32)
+                   * scale[a:b, None]).astype(np.float64)
+        else:
+            blk = t3[a:b].astype(np.float64)
+        ref32[a:b] = blk.mean(-1).astype(np.float32)
+        d = blk - ref32[a:b].astype(np.float64)[:, None]
+        s0[a:b] = blk.sum(-1)
+        s1[a:b] = blk @ idx
+        q[a:b] = (d * d).sum(-1)
 
     def pair(x64):
         hi = x64.astype(np.float32)
         lo = (x64 - hi.astype(np.float64)).astype(np.float32)
         return jnp.asarray(hi), jnp.asarray(lo)
 
-    ref32 = t3.mean(-1).astype(np.float32)
-    d = t3 - ref32.astype(np.float64)[:, None]
-    s0, s0c = pair(t3.sum(-1))
-    s1, s1c = pair(t3 @ idx)
-    q, qc = pair((d * d).sum(-1))
+    s0, s0c = pair(s0)
+    s1, s1c = pair(s1)
+    q, qc = pair(q)
     return StreamMoments(s0, s0c, s1, s1c, q, qc, jnp.asarray(ref32))
 
 
@@ -115,7 +142,7 @@ def _cadd(s, c, x):
 
 
 def _update_tile(s0, s0c, s1, s1c, q, qc, ref, y_new, y_old, y_first, y_last,
-                 length, evict):
+                 length, evict, scale=None):
     """The fused per-tile rank-1 update + Eq. 3 derivation (elementwise).
 
     ``length`` is the window length *after* the append; ``evict`` gates the
@@ -123,7 +150,19 @@ def _update_tile(s0, s0c, s1, s1c, q, qc, ref, y_new, y_old, y_first, y_last,
     compensated add, so grow and slide share one op sequence).  The S1 shift
     term uses the *pre-update* S0 pair — the survivors' index drop happens
     before the new column joins the sum.
+
+    ``scale`` enables the fused dequantize-and-update path of the quantized
+    archive tier: the four column operands arrive as stored codes (int8, or
+    bf16 with ``scale`` ignored by the caller passing float32-castable
+    values) and are decoded in-register — ``code * scale`` per candidate,
+    the exact multiply ``compression.dequantize_window`` uses — before the
+    identical compensated update.  Nothing float32-and-column-shaped ever
+    moves through memory, which is the ~4x bandwidth saving of the tier.
     """
+    if scale is not None:
+        deq = lambda y: y.astype(jnp.float32) * scale  # noqa: E731
+        y_new, y_old = deq(y_new), deq(y_old)
+        y_first, y_last = deq(y_first), deq(y_last)
     zero = jnp.zeros_like(y_new)
     gate = lambda x: jnp.where(evict, x, zero)  # noqa: E731
     s0_pre, s0c_pre = s0, s0c
@@ -150,9 +189,9 @@ def _update_tile(s0, s0c, s1, s1c, q, qc, ref, y_new, y_old, y_first, y_last,
 
 @functools.partial(jax.jit, static_argnames=())
 def _stats_update_vec(moments: StreamMoments, y_new, y_old, y_first, y_last,
-                      length, evict):
+                      length, evict, scale=None):
     out, stats = _update_tile(*moments, y_new, y_old, y_first, y_last,
-                              length, evict)
+                              length, evict, scale)
     return StreamMoments(*out), stats
 
 
@@ -160,16 +199,18 @@ def _stats_update_vec(moments: StreamMoments, y_new, y_old, y_first, y_last,
 # Pallas TPU kernel: same tile math, scalars in SMEM, grid (nt,).
 # ---------------------------------------------------------------------------
 
-def _stats_update_kernel(params_ref, s0_ref, s0c_ref, s1_ref, s1c_ref, q_ref,
-                         qc_ref, ref_ref, ynew_ref, yold_ref, yfirst_ref,
-                         ylast_ref, os0_ref, os0c_ref, os1_ref, os1c_ref,
-                         oq_ref, oqc_ref, area_ref, slope_ref, std_ref):
+def _stats_update_kernel(quantized, params_ref, *refs):
+    """Shared kernel body; ``quantized`` adds a trailing scale-row input
+    feeding the in-register dequantize of the four column operands."""
+    n_in = 12 if quantized else 11
+    ins = [r[0, :] for r in refs[:n_in]]
+    (os0_ref, os0c_ref, os1_ref, os1c_ref, oq_ref, oqc_ref, area_ref,
+     slope_ref, std_ref) = refs[n_in:]
     length = params_ref[0, 0]
     evict = params_ref[0, 1] > 0
+    scale = ins[11] if quantized else None
     (s0, s0c, s1, s1c, q, qc, _), stats = _update_tile(
-        s0_ref[0, :], s0c_ref[0, :], s1_ref[0, :], s1c_ref[0, :],
-        q_ref[0, :], qc_ref[0, :], ref_ref[0, :], ynew_ref[0, :],
-        yold_ref[0, :], yfirst_ref[0, :], ylast_ref[0, :], length, evict)
+        *ins[:11], length, evict, scale)
     os0_ref[0, :] = s0
     os0c_ref[0, :] = s0c
     os1_ref[0, :] = s1
@@ -182,21 +223,24 @@ def _stats_update_kernel(params_ref, s0_ref, s0c_ref, s1_ref, s1c_ref, q_ref,
 
 
 def _stats_update_pallas(moments: StreamMoments, y_new, y_old, y_first,
-                         y_last, length, evict, *, tile: int = DEFAULT_TILE,
-                         interpret: bool = False):
+                         y_last, length, evict, scale=None, *,
+                         tile: int = DEFAULT_TILE, interpret: bool = False):
     K = y_new.shape[0]
-    tiles = _pad_tiles((*moments, y_new, y_old, y_first, y_last), tile,
-                       (0,) * 11)
+    quantized = scale is not None
+    arrs = (*moments, y_new, y_old, y_first, y_last) \
+        + ((scale,) if quantized else ())
+    tiles = _pad_tiles(arrs, tile, (0,) * len(arrs))
     nt = tiles.pop()
     params = jnp.stack([jnp.asarray(length, jnp.float32),
                         jnp.where(evict, 1.0, 0.0).astype(jnp.float32)]
                        ).reshape(1, 2)
     row_spec = pl.BlockSpec((1, tile), lambda t: (t, 0))
     out = pl.pallas_call(
-        _stats_update_kernel,
+        functools.partial(_stats_update_kernel, quantized),
         grid=(nt,),
         in_specs=[pl.BlockSpec((1, 2), lambda t: (0, 0),
-                               memory_space=pltpu.SMEM)] + [row_spec] * 11,
+                               memory_space=pltpu.SMEM)]
+        + [row_spec] * len(arrs),
         out_specs=[row_spec] * 9,
         out_shape=[jax.ShapeDtypeStruct((nt, tile), jnp.float32)] * 9,
         interpret=interpret,
@@ -209,7 +253,7 @@ def _stats_update_pallas(moments: StreamMoments, y_new, y_old, y_first,
 
 
 def stats_update(moments: StreamMoments, y_new, y_old, y_first, y_last,
-                 length, evict, *, tile: int | None = None,
+                 length, evict, *, scale=None, tile: int | None = None,
                  backend: str | None = None, interpret: bool | None = None):
     """One collector tick: rank-1-update the moments, derive the statistics.
 
@@ -227,6 +271,18 @@ def stats_update(moments: StreamMoments, y_new, y_old, y_first, y_last,
         Window length after the tick.
     evict : scalar bool
         Whether the window was full (slide) or still growing (append only).
+    scale : (K,) float32 array, optional
+        The quantized archive tier's fused dequantize-and-update path: when
+        given, the four column operands are **stored int8 codes** and each
+        is decoded in-register as ``code * scale`` (the exact
+        ``compression.dequantize_window`` multiply) before the identical
+        compensated tile math — the update consumes a quarter of the
+        float32 path's column bandwidth and nothing float32-and-(K,)-shaped
+        round-trips through memory.  The derived statistics then track
+        ``candidate_stats`` of the *dequantized* materialized window (the
+        tier's ground truth) at the same float32-ulp budget.  bf16 rings
+        need no scale: their columns cast to float32 exactly, so they take
+        the ``scale=None`` path as-is.
 
     Returns ``(new_moments, CandidateStats)`` where the statistics match
     ``scoring.candidate_stats`` of the materialized post-tick window at
@@ -239,8 +295,14 @@ def stats_update(moments: StreamMoments, y_new, y_old, y_first, y_last,
     tile = DEFAULT_TILE if tile is None else tile
     f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
     moments = StreamMoments(*(f32(m) for m in moments))
-    args = (moments, f32(y_new), f32(y_old), f32(y_first), f32(y_last),
-            f32(length), jnp.asarray(evict, bool))
+    if scale is None:
+        cols = (f32(y_new), f32(y_old), f32(y_first), f32(y_last))
+    else:
+        # Quantized path: columns stay in their storage dtype end to end;
+        # the cast-and-scale happens inside the tile math.
+        cols = tuple(jnp.asarray(y) for y in (y_new, y_old, y_first, y_last))
+        scale = f32(scale)
+    args = (moments, *cols, f32(length), jnp.asarray(evict, bool), scale)
     if backend is None:
         backend = "pallas" if jax.default_backend() == "tpu" else "vec"
     if backend == "pallas":

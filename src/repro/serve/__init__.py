@@ -19,6 +19,7 @@ versioned cache keys, and deadline-batched admission — lives in
 ``repro.stream`` and plugs into this layer via ``BatchServer.serve``
 and ``ArchiveCache.put``/``invalidate``.
 """
-from .archive import ArchiveCache, DeviceArchive, PoolCache  # noqa: F401
+from .archive import (ArchiveCache, DeviceArchive, PoolCache,  # noqa: F401
+                      QuantizedDeviceArchive)
 from .histogram import LatencyHistogram  # noqa: F401
 from .server import BatchServer, ServeStats  # noqa: F401

@@ -14,9 +14,11 @@ from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core import scoring
 from ..core.types import CandidateSet, Recommendation, ResourceRequest
+from ..parallel import compression
 
 
 @dataclass(frozen=True)
@@ -41,7 +43,8 @@ class DeviceArchive:
 
     @classmethod
     def stage(cls, cands: CandidateSet, *, key: str | None = None,
-              device=None) -> "DeviceArchive":
+              device=None, precision: str = "float32",
+              headroom: float = 1.0):
         """Put a candidate set's numeric arrays on device.
 
         ``device`` pins the arrays (and therefore every computation that
@@ -49,15 +52,33 @@ class DeviceArchive:
         specific :func:`jax.devices` entry — the K-sharded archive layer
         (``repro.shard``) stages one slice per device this way.  ``None``
         keeps the default-device behavior.
+
+        ``precision`` selects the archive storage tier
+        (``compression.ARCHIVE_PRECISIONS``): ``"bfloat16"`` / ``"int8"``
+        return a :class:`QuantizedDeviceArchive` holding the T3 window as
+        stored codes (2x / 4x fewer resident window bytes) plus a
+        per-candidate float32 scale, with a ``#<precision>`` key suffix so
+        tiers never collide in an :class:`ArchiveCache`.  ``headroom``
+        widens the int8 step to leave clip slack (see
+        ``compression.candidate_scales``).  Catalog columns stay float32 on
+        every tier — hourly-cost accounting is never quantised.
         """
+        precision = compression.resolve_precision(precision)
+        key = key if key is not None else cands.fingerprint()
         put = lambda a: jax.device_put(jnp.asarray(a, jnp.float32),  # noqa: E731
                                        device)
-        return cls(
-            key=key if key is not None else cands.fingerprint(),
-            host=cands,
-            t3=put(cands.t3), prices=put(cands.prices),
-            vcpus=put(cands.vcpus), memory_gb=put(cands.memory_gb),
-        )
+        catalog = dict(prices=put(cands.prices), vcpus=put(cands.vcpus),
+                       memory_gb=put(cands.memory_gb))
+        if precision == "float32":
+            return cls(key=key, host=cands, t3=put(cands.t3), **catalog)
+        t3 = np.asarray(cands.t3)
+        scale = compression.candidate_scales(t3, precision,
+                                             headroom=headroom)
+        return QuantizedDeviceArchive(
+            key=f"{key}#{precision}", host=cands,
+            t3_q=jax.device_put(jnp.asarray(
+                compression.quantize_window(t3, scale, precision)), device),
+            scale=put(scale), precision=precision, **catalog)
 
     def score_stats(self) -> scoring.CandidateStats:
         """Request-independent scoring statistics, computed once per archive.
@@ -108,6 +129,74 @@ class DeviceArchive:
         return len(self.host)
 
 
+@dataclass(frozen=True)
+class QuantizedDeviceArchive:
+    """A staged archive whose T3 window lives on device as stored codes.
+
+    Drop-in for :class:`DeviceArchive` everywhere the engine looks: the
+    same catalog columns, a ``score_stats()`` memo (computed from the
+    dequantized window, so the statistics are the tier's ground truth), and
+    a :attr:`t3` property that decodes on access.  The decode is **not**
+    memoised — the whole point of the tier is that nothing float32-and-
+    (K, T)-shaped stays resident, so the dense scoring path pays a
+    per-batch ``code * scale`` multiply while the tiled/stats path (the
+    intended consumer at quantised-tier K) never materialises the window at
+    all (:attr:`t3_operand` hands it a (K,) statistics array instead).
+
+    The per-sample storage error is bounded by ``scale / 2``
+    (``repro.core.quantized`` turns that into the documented score-drift
+    budget); staged windows never clip — the scale is derived from this
+    exact window's per-candidate maxabs.
+    """
+
+    key: str
+    host: CandidateSet
+    t3_q: jax.Array             # (K, T) stored codes (int8 / bf16)
+    scale: jax.Array            # (K,) float32 quantisation step
+    precision: str
+    prices: jax.Array
+    vcpus: jax.Array
+    memory_gb: jax.Array
+
+    @property
+    def t3(self) -> jax.Array:
+        """The dequantized float32 window, rebuilt on each access."""
+        return compression.dequantize_window(self.t3_q, self.scale,
+                                             self.precision)
+
+    def score_stats(self) -> scoring.CandidateStats:
+        """Eq. 3 statistics of the dequantized window, memoised once."""
+        stats = self.__dict__.get("_score_stats")
+        if stats is None:
+            stats = scoring.candidate_stats(self.t3)
+            object.__setattr__(self, "_score_stats", stats)
+        return stats
+
+    @property
+    def t3_operand(self):
+        """(K,)-shaped inert t3 stand-in for stats-backed tiled dispatches
+        (see ``DeviceArchive.t3_operand``) — never the decoded window, which
+        must not be kept alive by a dispatch signature."""
+        return self.score_stats().area
+
+    @property
+    def nbytes(self) -> int:
+        """Resident device bytes: stored codes + scale + catalog columns +
+        the memoised statistics once materialised.  The transient decoded
+        window of a dense dispatch is deliberately excluded — it does not
+        outlive the dispatch."""
+        n = sum(int(a.nbytes) for a in
+                (self.t3_q, self.scale, self.prices, self.vcpus,
+                 self.memory_gb))
+        stats = self.__dict__.get("_score_stats")
+        if stats is not None:
+            n += sum(int(a.nbytes) for a in stats)
+        return n
+
+    def __len__(self) -> int:
+        return len(self.host)
+
+
 @dataclass
 class ArchiveCache:
     """LRU of :class:`DeviceArchive` entries keyed by archive fingerprint.
@@ -133,6 +222,13 @@ class ArchiveCache:
 
     capacity: int = 4
     max_bytes: int | None = None
+    #: storage tier ``get`` stages misses at (``compression.
+    #: ARCHIVE_PRECISIONS``).  The tier is part of every entry's key
+    #: (``#<precision>`` suffix on the quantised tiers), so caches — or one
+    #: cache reconfigured across restarts — can never serve an int8 window
+    #: to a float32 consumer or vice versa.
+    precision: str = "float32"
+    headroom: float = 1.0
     hits: int = 0
     misses: int = 0
     evictions: int = 0
@@ -143,16 +239,21 @@ class ArchiveCache:
             raise ValueError("capacity must be >= 1")
         if self.max_bytes is not None and self.max_bytes < 1:
             raise ValueError("max_bytes must be >= 1")
+        compression.resolve_precision(self.precision)
 
-    def get(self, cands: CandidateSet, *, key: str | None = None) -> DeviceArchive:
-        key = key if key is not None else cands.fingerprint()
+    def get(self, cands: CandidateSet, *, key: str | None = None):
+        base = key if key is not None else cands.fingerprint()
+        key = base if self.precision == "float32" \
+            else f"{base}#{self.precision}"
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
             self._entries.move_to_end(key)
             return entry
         self.misses += 1
-        entry = DeviceArchive.stage(cands, key=key)
+        entry = DeviceArchive.stage(cands, key=base,
+                                    precision=self.precision,
+                                    headroom=self.headroom)
         self._entries[key] = entry
         self.enforce_budget()
         return entry

@@ -41,7 +41,6 @@ from ..core.config import (APIDeprecationWarning, EngineConfig,
                            resolve_engine_config)
 from ..core.engine import RecommendationEngine
 from ..core.types import CandidateSet, Recommendation
-from .archive import ArchiveCache
 from .histogram import LatencyHistogram
 
 DEFAULT_BUCKETS = (1, 8, 64, 256)
@@ -114,8 +113,7 @@ class BatchServer:
         self.engine = (engine if engine is not None
                        else RecommendationEngine(config=self.config))
         self.bucket_sizes = tuple(sorted(set(bucket_sizes)))
-        self.cache = ArchiveCache(capacity=self.config.cache_capacity,
-                                  max_bytes=self.config.cache_max_bytes)
+        self.cache = self.config.build_cache()
         self.stats = ServeStats()
         self._stats_lock = threading.Lock()
 

@@ -150,7 +150,9 @@ class ShardedArchive(_ShardedSurface):
 
     @classmethod
     def stage(cls, cands: CandidateSet, *, n_shards: int | None = None,
-              devices=None, key: str | None = None) -> "ShardedArchive":
+              devices=None, key: str | None = None,
+              precision: str = "float32",
+              headroom: float = 1.0) -> "ShardedArchive":
         """Split ``cands`` into shards and stage one slice per device.
 
         ``devices`` defaults to :func:`jax.devices` and ``n_shards`` to its
@@ -158,14 +160,24 @@ class ShardedArchive(_ShardedSurface):
         ``n_shards`` exceeds it, which keeps the layer testable on a
         single-device host (parity is a property of the math, not the
         device count).
+
+        ``precision`` stages every shard at an archive storage tier
+        (``DeviceArchive.stage``).  Quantisation is per-candidate (the
+        scale of row ``i`` depends on row ``i`` alone), so a sharded
+        quantised archive stores — and decodes to — exactly the rows of the
+        equivalent single-device one, and the tier suffix lands on the
+        archive key as well as each shard's.
         """
         bounds, devs = _plan(len(cands), n_shards, devices)
         key = key if key is not None else cands.fingerprint()
         shards = tuple(
             DeviceArchive.stage(cands.take(np.arange(a, b)),
-                                key=f"{key}/s{i}", device=dev)
+                                key=f"{key}/s{i}", device=dev,
+                                precision=precision, headroom=headroom)
             for i, ((a, b), dev) in enumerate(zip(bounds, devs)))
         prices, vcpus, memory_gb = _stage_full_columns(cands)
+        if precision != "float32":
+            key = f"{key}#{precision}"
         return cls(key=key, host=cands, bounds=bounds, shards=shards,
                    prices=prices, vcpus=vcpus, memory_gb=memory_gb)
 
@@ -213,15 +225,18 @@ class ShardedRollingArchive(_ShardedSurface):
 
     def __init__(self, cands: CandidateSet, *, capacity: int | None = None,
                  name: str | None = None, n_shards: int | None = None,
-                 devices=None):
+                 devices=None, precision: str = "float32",
+                 headroom: float = 1.0):
         bounds, devs = _plan(len(cands), n_shards, devices)
         self.host = cands
         self.name = name if name is not None else cands.fingerprint()
         self.bounds = bounds
+        self.precision = precision
         self.shards = tuple(
             RollingDeviceArchive(cands.take(np.arange(a, b)),
                                  capacity=capacity, name=f"{self.name}/s{i}",
-                                 device=dev)
+                                 device=dev, precision=precision,
+                                 headroom=headroom)
             for i, ((a, b), dev) in enumerate(zip(bounds, devs)))
         self.prices, self.vcpus, self.memory_gb = _stage_full_columns(cands)
         self.version = 0
@@ -238,8 +253,18 @@ class ShardedRollingArchive(_ShardedSurface):
 
     @property
     def key(self) -> str:
-        """Versioned fingerprint: one bump per tick across all shards."""
-        return f"{self.name}@v{self.version}"
+        """Versioned fingerprint: one bump per tick across all shards,
+        tier-suffixed on the quantised precisions (see
+        ``RollingDeviceArchive.key``)."""
+        key = f"{self.name}@v{self.version}"
+        if self.precision != "float32":
+            key += f"#{self.precision}"
+        return key
+
+    @property
+    def clipped_samples(self) -> int:
+        """Total int8-clipped samples across shards since staging."""
+        return sum(s.clipped_samples for s in self.shards)
 
     @property
     def window_len(self) -> int:

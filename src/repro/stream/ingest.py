@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from ..cloudsim.collector import DataCollector
 from ..core.config import EngineConfig
+from ..parallel import compression
 from ..serve.archive import ArchiveCache
 from .rolling import RollingDeviceArchive
 
@@ -47,13 +48,25 @@ class LiveIngestor:
         :class:`~repro.serve.ArchiveCache` from the config's
         ``cache_capacity`` / ``cache_max_bytes`` — the same single source
         of truth the engine and server draw from.  Passing both ``cache``
-        and ``config`` is an error (two sources of truth).
+        and ``config`` is an error (two sources of truth).  The config's
+        ``archive_precision`` / ``archive_headroom`` also become the
+        staged ring's storage tier unless ``precision`` overrides them.
+    precision : str, optional
+        Storage tier of the rolling ring(s): ``"float32"`` (default) /
+        ``"bfloat16"`` / ``"int8"`` — see
+        ``repro.parallel.compression.ARCHIVE_PRECISIONS``.  An explicit
+        value wins over ``config.archive_precision``.
+    headroom : float, optional
+        int8 clip slack multiplier (``compression.candidate_scales``);
+        defaults to ``config.archive_headroom`` or 1.0.
     """
 
     def __init__(self, collector: DataCollector, *, window: int,
                  cache: ArchiveCache | None = None, name: str | None = None,
                  shards: int | None = None, devices=None,
-                 config: EngineConfig | None = None):
+                 config: EngineConfig | None = None,
+                 precision: str | None = None,
+                 headroom: float | None = None):
         if window < 1:
             raise ValueError("window must be >= 1")
         if shards is not None and shards < 1:
@@ -62,9 +75,17 @@ class LiveIngestor:
             if cache is not None:
                 raise TypeError("pass either cache= or config=, not both")
             cache = config.build_cache()
+        if precision is None:
+            precision = (config.archive_precision if config is not None
+                         else "float32")
+        if headroom is None:
+            headroom = (config.archive_headroom if config is not None
+                        else 1.0)
         self.collector = collector
         self.window = window
         self.cache = cache
+        self.precision = compression.resolve_precision(precision)
+        self.headroom = headroom
         self._name = name
         self._shards = shards
         self._devices = devices
@@ -86,10 +107,12 @@ class LiveIngestor:
             from ..shard import ShardedRollingArchive
             self.archive = ShardedRollingArchive(
                 cands, capacity=self.window, name=self._name,
-                n_shards=self._shards, devices=self._devices)
+                n_shards=self._shards, devices=self._devices,
+                precision=self.precision, headroom=self.headroom)
         else:
-            self.archive = RollingDeviceArchive(cands, capacity=self.window,
-                                                name=self._name)
+            self.archive = RollingDeviceArchive(
+                cands, capacity=self.window, name=self._name,
+                precision=self.precision, headroom=self.headroom)
         self._ingested = self.collector.ticks
         if self.cache is not None:
             if old_key is not None:

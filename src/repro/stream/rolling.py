@@ -36,6 +36,7 @@ import numpy as np
 from ..core import scoring
 from ..core.types import CandidateSet
 from ..kernels import stats_update as stats_update_lib
+from ..parallel import compression
 
 
 @jax.jit
@@ -66,6 +67,35 @@ def _append_step(buf, moments, col, y_old, slot, new_start, length, evict,
     return new_buf, moments, stats
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1),
+                   static_argnames=("precision", "backend", "interpret"))
+def _append_step_q(buf, moments, clips, col, y_old, scale, slot, new_start,
+                   length, evict, *, precision, backend=None, interpret=None):
+    """Quantized-tier tick: encode, donated slot write, fused O(K) update.
+
+    The incoming float32 column is quantised *inside* the dispatch
+    (``compression.quantize_column``) and only the stored codes touch the
+    ring — the (K, C) buffer stays int8/bf16 end to end.  The moments are
+    updated with the **stored** values (codes via the fused
+    dequantize-and-update ``scale`` path of the stats kernel, bf16 via its
+    exact f32 cast), so the streamed statistics track ``candidate_stats`` of
+    the dequantized window — the tier's ground truth — not of the lossy
+    pre-quantisation column.  ``clips`` accumulates samples that fell
+    outside the int8 clip range (the error-bound contract is void for them,
+    so they are counted, not hidden).  Donation discipline as
+    :func:`_append_step`: ``y_old`` is read in a prior dispatch.
+    """
+    codes, n_clip = compression.quantize_column(col, scale, precision)
+    new_buf = buf.at[:, slot].set(codes)
+    y_first = jax.lax.dynamic_index_in_dim(new_buf, new_start, axis=1,
+                                           keepdims=False)
+    moments, stats = stats_update_lib.stats_update(
+        moments, codes, y_old, y_first, codes, length, evict,
+        scale=scale if precision == "int8" else None,
+        backend=backend, interpret=interpret)
+    return new_buf, moments, stats, clips + n_clip
+
+
 @dataclass(frozen=True)
 class ArchiveSnapshot:
     """An immutable, version-pinned view of a :class:`RollingDeviceArchive`.
@@ -92,6 +122,14 @@ class ArchiveSnapshot:
     memory_gb: jax.Array
     stats: scoring.CandidateStats
     window_len: int
+    #: storage tier of the parent ring ("float32" / "bfloat16" / "int8") —
+    #: snapshots carry no window, but parity/error-bound consumers need to
+    #: know which tier produced the pinned statistics, and the key suffix
+    #: must keep tiers from colliding in the ArchiveCache.
+    precision: str = "float32"
+    #: the parent's per-candidate quantisation step (None on the float32
+    #: tier) — never donated, so the reference stays valid across ticks.
+    scale: jax.Array | None = None
 
     #: tells the engine to keep the scoring stage tiled even when the
     #: auto threshold would pick dense at this K (no window to re-reduce)
@@ -115,8 +153,11 @@ class ArchiveSnapshot:
 
     @property
     def nbytes(self) -> int:
-        return sum(int(a.nbytes) for a in
-                   (self.prices, self.vcpus, self.memory_gb, *self.stats))
+        n = sum(int(a.nbytes) for a in
+                (self.prices, self.vcpus, self.memory_gb, *self.stats))
+        if self.scale is not None:
+            n += int(self.scale.nbytes)
+        return n
 
     def __len__(self) -> int:
         return len(self.host)
@@ -139,8 +180,10 @@ class RollingDeviceArchive:
     """
 
     def __init__(self, cands: CandidateSet, *, capacity: int | None = None,
-                 name: str | None = None, device=None):
-        t3 = np.asarray(cands.t3, np.float64)
+                 name: str | None = None, device=None,
+                 precision: str = "float32", headroom: float = 1.0):
+        self.precision = compression.resolve_precision(precision)
+        t3 = np.asarray(cands.t3)
         K, T = t3.shape
         capacity = T if capacity is None else int(capacity)
         if capacity < T:
@@ -156,14 +199,29 @@ class RollingDeviceArchive:
         self.prices = put(cands.prices)
         self.vcpus = put(cands.vcpus)
         self.memory_gb = put(cands.memory_gb)
+        # Quantised tiers: per-candidate step frozen at staging (``headroom``
+        # buys clip slack for live columns beyond the seed's range), codes
+        # staged chunk-by-chunk — no second full-window host copy at any K.
+        host_scale = compression.candidate_scales(
+            t3, self.precision, headroom=headroom)
+        quantized = self.precision != "float32"
+        self.scale = put(host_scale) if quantized else None
+        self._clips = jax.device_put(jnp.int32(0), device)
         # physical ring: window in slots [0, T), zero-filled tail, cursor at T
-        buf = np.zeros((K, capacity), np.float32)
-        buf[:, :T] = t3.astype(np.float32)
-        self._buf = put(buf)
+        codes = compression.quantize_window(t3, host_scale, self.precision)
+        buf = np.zeros((K, capacity), codes.dtype)
+        buf[:, :T] = codes
+        self._buf = jax.device_put(jnp.asarray(buf), device)
         self._pos = T % capacity
         self._len = T
         self.version = 0
-        moments = stats_update_lib.moments_from_window(t3)
+        # Seed the moments from the *stored* window (codes decoded with the
+        # exact dequantize multiply / bf16 cast): the tier's ground truth is
+        # the dequantized window, and the streamed statistics must track it,
+        # not the lossy pre-quantisation seed.
+        moments = stats_update_lib.moments_from_window(
+            codes, scale=host_scale if self.precision == "int8" else None)
+        del codes
         # colocate the accumulators with the ring: the donated append
         # dispatch consumes both, and jit rejects split-device operands
         self._moments = stats_update_lib.StreamMoments(
@@ -176,8 +234,23 @@ class RollingDeviceArchive:
 
     @property
     def key(self) -> str:
-        """Versioned fingerprint: changes with every appended column."""
-        return f"{self.name}@v{self.version}"
+        """Versioned fingerprint: changes with every appended column.
+
+        Quantised tiers get a ``#<precision>`` suffix so two archives staged
+        from the same candidate set at different precisions can never
+        collide in the :class:`~repro.serve.ArchiveCache`.
+        """
+        key = f"{self.name}@v{self.version}"
+        if self.precision != "float32":
+            key += f"#{self.precision}"
+        return key
+
+    @property
+    def clipped_samples(self) -> int:
+        """Samples clipped to the int8 code range since staging (0 on the
+        bf16/float32 tiers).  The documented error bound assumes unclipped
+        storage; a non-zero count voids it and callers must surface that."""
+        return int(self._clips)
 
     @property
     def window_len(self) -> int:
@@ -210,9 +283,17 @@ class RollingDeviceArchive:
         new_start = (slot + 1) % self.capacity if evict else \
             (slot + 1 - new_len) % self.capacity
         y_old = _read_col(self._buf, jnp.int32(slot))
-        self._buf, self._moments, stats = _append_step(
-            self._buf, self._moments, col, y_old, jnp.int32(slot),
-            jnp.int32(new_start), jnp.float32(new_len), jnp.asarray(evict))
+        if self.precision == "float32":
+            self._buf, self._moments, stats = _append_step(
+                self._buf, self._moments, col, y_old, jnp.int32(slot),
+                jnp.int32(new_start), jnp.float32(new_len),
+                jnp.asarray(evict))
+        else:
+            self._buf, self._moments, stats, self._clips = _append_step_q(
+                self._buf, self._moments, self._clips, col, y_old,
+                self.scale, jnp.int32(slot), jnp.int32(new_start),
+                jnp.float32(new_len), jnp.asarray(evict),
+                precision=self.precision)
         self._pos = (slot + 1) % self.capacity
         self._len = new_len
         self._stats = stats
@@ -226,7 +307,8 @@ class RollingDeviceArchive:
         return ArchiveSnapshot(
             key=self.key, version=self.version, host=self.host,
             prices=self.prices, vcpus=self.vcpus, memory_gb=self.memory_gb,
-            stats=self.score_stats(), window_len=self._len)
+            stats=self.score_stats(), window_len=self._len,
+            precision=self.precision, scale=self.scale)
 
     # -- engine-facing surface --------------------------------------------
 
@@ -239,12 +321,19 @@ class RollingDeviceArchive:
         """
         if self._stats is None:     # version 0: derive from the seed moments
             m = self._moments
-            y_first = self._buf[:, self._start]
-            y_last = self._buf[:, (self._pos - 1) % self.capacity]
+            y_first = self._decode_col(self._buf[:, self._start])
+            y_last = self._decode_col(
+                self._buf[:, (self._pos - 1) % self.capacity])
             self._stats = scoring.stats_from_moments(
                 m.s0 + m.s0c, m.s1 + m.s1c, m.q + m.qc, y_first, y_last,
                 jnp.float32(self._len), m.ref)
         return self._stats
+
+    def _decode_col(self, col):
+        """Stored ring column -> float32 value (the dequantize multiply on
+        the int8 tier, an exact cast on bf16/f32)."""
+        col = col.astype(jnp.float32)
+        return col * self.scale if self.precision == "int8" else col
 
     @property
     def t3(self) -> jax.Array:
@@ -257,7 +346,10 @@ class RollingDeviceArchive:
         """
         if self._t3_logical is None:
             order = (self._start + np.arange(self._len)) % self.capacity
-            self._t3_logical = jnp.take(self._buf, jnp.asarray(order), axis=1)
+            stored = jnp.take(self._buf, jnp.asarray(order), axis=1)
+            self._t3_logical = compression.dequantize_window(
+                stored, self.scale, self.precision) \
+                if self.precision != "float32" else stored
         return self._t3_logical
 
     @property
@@ -274,9 +366,17 @@ class RollingDeviceArchive:
 
     @property
     def nbytes(self) -> int:
+        """Every resident device byte of this archive: ring + catalog
+        columns + moment pairs + scale vector + whatever is memoised right
+        now (statistics, logical-window gather) — the number the
+        ``ArchiveCache`` budget and the memory benchmark charge for."""
         n = sum(int(a.nbytes) for a in
                 (self._buf, self.prices, self.vcpus, self.memory_gb))
         n += self._moments.nbytes
+        if self.scale is not None:
+            n += int(self.scale.nbytes)
         if self._stats is not None:
             n += sum(int(a.nbytes) for a in self._stats)
+        if self._t3_logical is not None:
+            n += int(self._t3_logical.nbytes)
         return n

@@ -16,6 +16,7 @@ import pytest
 
 from repro.core import scoring
 from repro.kernels import stats_update as su
+from repro.parallel import compression as comp
 
 RTOL = 1e-5
 ATOL = 1e-4
@@ -76,6 +77,45 @@ def test_long_stream_no_drift():
     _assert_stats_close(stats, scoring.candidate_stats(win))
     # the resolved moments themselves are still tight against exact float64
     win64 = win.astype(np.float64)
+    idx = np.arange(T, dtype=np.float64)
+    d64 = win64 - np.asarray(m.ref, np.float64)[:, None]
+    for got, want in ((m.s0 + m.s0c, win64.sum(-1)),
+                      (m.s1 + m.s1c, win64 @ idx),
+                      (m.q + m.qc, (d64 * d64).sum(-1))):
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
+
+
+@pytest.mark.parametrize("backend,ticks,kwargs", [
+    ("vec", 2000, {}),
+    ("pallas", 50, {"interpret": True, "tile": 64}),
+])
+def test_quantized_long_stream_no_drift(backend, ticks, kwargs):
+    """Quantized tier over a long sliding stream: the fused
+    dequantize-and-update path keeps tracking ``candidate_stats`` of the
+    *dequantized* stored window at the float32 tier's ulp budget — on both
+    the vectorized lane (2000 ticks) and the Pallas kernel in interpret
+    mode (50 ticks — the tile math is shared, interpret is just slow)."""
+    rng = np.random.default_rng(6)
+    K, T = 37, 101
+    # A fixed scale derived from the value ceiling: U(0, 50) draws can
+    # never clip, so every tick stays inside the error-bound contract.
+    scale = comp.candidate_scales(np.full((K, 1), 50.0), "int8")
+    win = rng.uniform(0.0, 50.0, (K, T))
+    codes = comp.quantize_window(win, scale, "int8")
+    m = su.moments_from_window(codes, scale=scale)
+    for _ in range(ticks):
+        col = jnp.asarray(rng.uniform(0.0, 50.0, K), jnp.float32)
+        new, n_clip = comp.quantize_column(col, jnp.asarray(scale), "int8")
+        y_old = codes[:, 0]
+        codes = _slide(codes, np.asarray(new))
+        m, stats = su.stats_update(m, new, y_old, codes[:, 0], codes[:, -1],
+                                   T, True, scale=scale, backend=backend,
+                                   **kwargs)
+    assert int(n_clip) == 0
+    deq = np.asarray(comp.dequantize_window(codes, scale, "int8"))
+    _assert_stats_close(stats, scoring.candidate_stats(deq))
+    # and against exact float64 reductions of the decoded window
+    win64 = deq.astype(np.float64)
     idx = np.arange(T, dtype=np.float64)
     d64 = win64 - np.asarray(m.ref, np.float64)[:, None]
     for got, want in ((m.s0 + m.s0c, win64.sum(-1)),
