@@ -1,0 +1,231 @@
+"""Closed-loop operator replay: delivered vs recommended availability.
+
+Runs the fault-injected replay harness (``repro.operator.ChaosReplay``)
+end to end — market advancing on the collector cadence, traffic through a
+live admission worker, the operator reconciling every cycle — for three
+scenarios:
+
+- ``no_fault``            — control: the capacity process alone; delivered
+  availability must stay within ``NOFAULT_TOLERANCE`` of recommended;
+- ``interruption_replay`` — scheduled ``market.reclaim`` bursts against the
+  tracked pools, plus a failing admission drain; every interrupted pool
+  must end re-recommended or carrying a migration plan;
+- ``collector_outage``    — collection raises for whole cycles (on the
+  ``azure`` profile, so missing SPS query responses ride along): the loop
+  must degrade to stale-archive serving and recover, never crash.
+
+Hard gates (enforced in every mode, not just ``--check``): zero stranded
+tickets, admission worker alive at exit, zero unresolved pools, the
+no-fault delivery bound, and stale-then-recovered cycles under outage.
+
+Modes::
+
+    python -m benchmarks.operator_replay                 # full replays,
+        # writes the committed benchmarks/BENCH_operator.json artifact
+    python -m benchmarks.operator_replay --smoke         # short replays
+    python -m benchmarks.operator_replay --smoke --check benchmarks/BENCH_operator.json
+        # CI lane: fail on any gate violation or on a delivered-availability
+        # regression vs the committed artifact
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+from repro.operator import ChaosReplay, ChaosSchedule, ReplayReport
+
+from ._world import row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_operator.json"
+
+NOFAULT_TOLERANCE = 0.05       # delivered >= recommended - this, no faults
+DELIVERY_REGRESSION = 0.02     # --check: delivered may drop this much abs.
+
+#: scenario -> (replay kwargs, schedule factory taking the cycle count)
+SCENARIOS = {
+    "no_fault": (
+        {"profile": "aws"},
+        lambda cycles: ChaosSchedule(),
+    ),
+    "interruption_replay": (
+        {"profile": "aws"},
+        lambda cycles: ChaosSchedule(
+            reclaims={cycles // 4: 4, cycles // 2: 6, (3 * cycles) // 4: 3},
+            failing_drains=frozenset({cycles // 3}),
+        ),
+    ),
+    "collector_outage": (
+        {"profile": "azure"},
+        lambda cycles: ChaosSchedule(
+            collector_outages=frozenset({cycles // 4, cycles // 4 + 1,
+                                         (2 * cycles) // 3}),
+            delayed_ticks=frozenset({cycles // 2}),
+        ),
+    ),
+}
+
+FULL = {"cycles": 30, "n_targets": 48, "window": 12, "warmup_cycles": 12}
+SMOKE = {"cycles": 12, "n_targets": 24, "window": 8, "warmup_cycles": 8}
+
+
+def _replay(scenario: str, size: dict, seed: int = 0) -> tuple[ReplayReport, float]:
+    kw, schedule = SCENARIOS[scenario]
+    t0 = time.perf_counter()
+    report = ChaosReplay(seed=seed, schedule=schedule(size["cycles"]),
+                         **size, **kw).run(scenario)
+    return report, time.perf_counter() - t0
+
+
+def _gate_failures(reports: dict[str, ReplayReport]) -> list[str]:
+    """Every hard acceptance gate, one message per violation."""
+    fails = []
+    for name, r in reports.items():
+        if r.stranded_tickets:
+            fails.append(f"{name}: {r.stranded_tickets} stranded tickets")
+        if not r.worker_alive_at_end:
+            fails.append(f"{name}: admission worker dead at exit")
+        if r.unresolved_pools:
+            fails.append(f"{name}: {r.unresolved_pools} interrupted pools "
+                         "with no re-recommendation and no migration plan")
+    nf = reports.get("no_fault")
+    if nf is not None and nf.delivery_gap > NOFAULT_TOLERANCE:
+        fails.append(f"no_fault: delivered {nf.delivered_availability:.4f} "
+                     f"below recommended {nf.recommended_availability:.4f} "
+                     f"- {NOFAULT_TOLERANCE}")
+    ir = reports.get("interruption_replay")
+    if ir is not None:
+        if ir.interruptions == 0:
+            fails.append("interruption_replay: schedule injected nothing")
+        if ir.rerecommendations + ir.migrations_planned == 0:
+            fails.append("interruption_replay: operator never reacted")
+    co = reports.get("collector_outage")
+    if co is not None:
+        if co.stale_cycles == 0:
+            fails.append("collector_outage: outage never went stale")
+        if co.ingest_failures == 0:
+            fails.append("collector_outage: outage never observed")
+    return fails
+
+
+def _report_row(name: str, r: ReplayReport, wall_s: float) -> str:
+    return row(f"operator/{name}", wall_s * 1e6,
+               recommended=round(r.recommended_availability, 4),
+               delivered=round(r.delivered_availability, 4),
+               interruptions=r.interruptions,
+               rerecs=r.rerecommendations,
+               plans=r.migrations_planned,
+               launches=r.launches,
+               stale_cycles=r.stale_cycles,
+               failed_drains=r.failed_drains,
+               stranded=r.stranded_tickets,
+               worker_alive=r.worker_alive_at_end)
+
+
+def _run_all(size: dict) -> tuple[dict[str, ReplayReport], dict[str, float]]:
+    reports, walls = {}, {}
+    for name in SCENARIOS:
+        reports[name], walls[name] = _replay(name, size)
+    return reports, walls
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size replays, gates enforced."""
+    reports, walls = _run_all(SMOKE)
+    fails = _gate_failures(reports)
+    if fails:
+        raise AssertionError("; ".join(fails))
+    return [_report_row(n, r, walls[n]) for n, r in reports.items()]
+
+
+def _scenario_dicts(reports: dict[str, ReplayReport],
+                    walls: dict[str, float]) -> dict:
+    return {
+        name: {"wall_s": round(walls[name], 2), **vars(r),
+               "delivery_gap": round(r.delivery_gap, 6)}
+        for name, r in reports.items()
+    }
+
+
+def _payload(reports: dict[str, ReplayReport], walls: dict[str, float],
+             size: dict) -> dict:
+    # the smoke-size replays ride along so --check (which runs smoke sizes)
+    # has a like-for-like delivered-availability reference
+    smoke_reports, smoke_walls = _run_all(SMOKE)
+    return {
+        "meta": {**size, "smoke": SMOKE,
+                 "nofault_tolerance": NOFAULT_TOLERANCE},
+        "scenarios": _scenario_dicts(reports, walls),
+        "smoke_scenarios": _scenario_dicts(smoke_reports, smoke_walls),
+        "gates_passed": not (_gate_failures(reports)
+                             or _gate_failures(smoke_reports)),
+    }
+
+
+def _check(artifact: Path) -> int:
+    committed = json.loads(artifact.read_text())
+    if not committed.get("gates_passed", False):
+        print("# FAIL: committed artifact recorded failing gates",
+              file=sys.stderr)
+        return 1
+    reports, walls = _run_all(SMOKE)
+    for name, r in reports.items():
+        print(_report_row(name, r, walls[name]))
+    fails = _gate_failures(reports)
+    refs = committed.get("smoke_scenarios", committed["scenarios"])
+    for name, r in reports.items():
+        ref = refs.get(name)
+        if ref is None:
+            fails.append(f"{name}: missing from committed artifact")
+            continue
+        floor = ref["delivered_availability"] - DELIVERY_REGRESSION
+        if r.delivered_availability < floor:
+            fails.append(
+                f"{name}: delivered {r.delivered_availability:.4f} regressed "
+                f"below committed {ref['delivered_availability']:.4f} "
+                f"- {DELIVERY_REGRESSION}")
+    if fails:
+        for f in fails:
+            print(f"# FAIL: {f}", file=sys.stderr)
+        return 1
+    print("# operator replay check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short replays only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_operator.json "
+                         "and exit non-zero on gate violation/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full replays")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    print("name,us_per_call,derived")
+    if args.smoke:
+        for line in run():
+            print(line)
+        return
+    reports, walls = _run_all(FULL)
+    for name, r in reports.items():
+        print(_report_row(name, r, walls[name]))
+    fails = _gate_failures(reports)
+    if fails:
+        for f in fails:
+            print(f"# FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    args.out.write_text(json.dumps(_payload(reports, walls, FULL),
+                                   indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

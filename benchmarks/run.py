@@ -30,6 +30,7 @@ MODULES = [
     "archive_memory",
     "shard_scaling",
     "latency_slo",
+    "operator_replay",
     "kernels_micro",
     "roofline",
 ]

@@ -43,6 +43,13 @@ class CollectorConfig:
     #: ``to_candidate_set`` still hand out float64, so every consumer sees
     #: bit-identical values regardless of the ring dtype.
     ring_dtype: str = "float64"
+    #: fault-injection hook, called as ``fault_hook(tick)`` at the start of
+    #: every :meth:`DataCollector.collect_once`.  Raising aborts the tick
+    #: before anything is probed or appended — the chaos adapter
+    #: (``repro.operator.chaos``) models collector outages this way, and the
+    #: operator's reconcile loop is what absorbs the raise (bounded retry +
+    #: backoff, then a stale-archive warning).  ``None`` disables it.
+    fault_hook: object | None = None
 
 
 class DataCollector:
@@ -74,7 +81,23 @@ class DataCollector:
     # -- one collection cycle ------------------------------------------------
 
     def collect_once(self) -> None:
-        self.times.append(self.market.now)
+        """One collection cycle over all targets — **atomic** in the archive.
+
+        All per-target probing happens into tick-local buffers; the archive
+        (``times`` / ``t3_archive`` / ``t2_archive`` / host ring / ``_tick``)
+        is committed only after every target produced a value.  A raise mid
+        collection — the configured ``fault_hook``, a rate-limit
+        ``QueryLimitExceeded``, a vendor-side error — therefore leaves the
+        archive exactly as it was: no target ever holds more columns than
+        another, and ``to_candidate_set`` can never assemble a ragged
+        window.  (Estimator/TSTP caches may have absorbed partial
+        observations before the raise; they are monotone accumulators, so a
+        retried tick just continues from them.)
+        """
+        if self.cfg.fault_hook is not None:
+            self.cfg.fault_hook(self._tick)
+        t3_new: list[int] = []
+        t2_new: list[int] = []
         for tgt in self.targets:
             ty, rg, az = tgt
             if self.cfg.mode == "usqs":
@@ -82,8 +105,8 @@ class DataCollector:
                 sps = self.service.query(ty, rg, az, tc)
                 if sps is not None:   # azure-profile queries may be missing
                     self._estimators[tgt].observe(tc, sps, self._tick)
-                self.t3_archive[tgt].append(self._estimators[tgt].t3())
-                self.t2_archive[tgt].append(-1)
+                t3_new.append(self._estimators[tgt].t3())
+                t2_new.append(-1)
             elif self.cfg.mode == "tstp":
                 res = find_transition_points(
                     lambda n: self.service.query(ty, rg, az, n) or 1,
@@ -91,8 +114,8 @@ class DataCollector:
                     cache=self._tstp_cache.get(tgt),
                     early_stop=self.cfg.tstp_early_stop)
                 self._tstp_cache[tgt] = res
-                self.t3_archive[tgt].append(res.t3)
-                self.t2_archive[tgt].append(res.t2)
+                t3_new.append(res.t3)
+                t2_new.append(res.t2)
             else:  # full scan (ground truth; expensive)
                 t3 = t2 = 0
                 for n in range(self.cfg.t_min, self.cfg.t_max + 1):
@@ -101,12 +124,16 @@ class DataCollector:
                         t3 = n
                     if s is not None and s >= 2:
                         t2 = n
-                self.t3_archive[tgt].append(t3)
-                self.t2_archive[tgt].append(t2)
+                t3_new.append(t3)
+                t2_new.append(t2)
+        # ---- commit (no raises below this line) --------------------------
+        self.times.append(self.market.now)
+        for tgt, t3, t2 in zip(self.targets, t3_new, t2_new):
+            self.t3_archive[tgt].append(t3)
+            self.t2_archive[tgt].append(t2)
         if self._ring is not None:
             cap = self._ring.shape[1]
-            self._ring[:, self._tick % cap] = [self.t3_archive[t][-1]
-                                               for t in self.targets]
+            self._ring[:, self._tick % cap] = t3_new
             self._ring_len = min(self._ring_len + 1, cap)
         self._tick += 1
 

@@ -86,6 +86,12 @@ class SpotMarket:
         self._records: list[NodeRecord] = []
         self._alive_by_pool: dict[int, list[int]] = {}
         self._rng = np.random.default_rng(seed ^ 0x5F0CAFE)
+        #: append-only interruption event log.  ``advance`` (capacity-driven
+        #: reclaims) and :meth:`reclaim` (targeted chaos reclaims) both append
+        #: here, so a consumer that missed an ``advance`` return value — the
+        #: operator's reconcile loop observes the market, it does not drive
+        #: it — can still replay every event via :meth:`events_since`.
+        self.interruptions: list[NodeRecord] = []
 
         pools = catalog.pools()
         self.pool_keys: list[tuple[InstanceType, str, str]] = pools
@@ -241,6 +247,10 @@ class SpotMarket:
                 self._used[rec.pool_idx] -= 1
                 self._alive_by_pool[rec.pool_idx].remove(nid)
 
+    def node(self, node_id: int) -> NodeRecord:
+        """The (live, mutable) record of one launched node."""
+        return self._records[node_id]
+
     # ------------------------------------------------------------------
     # time + interruptions
     # ------------------------------------------------------------------
@@ -275,7 +285,38 @@ class SpotMarket:
                     self._used[pool_i] -= 1
                     events.append(rec)
         self.now = to_t
+        self.interruptions.extend(events)
         return events
+
+    def reclaim(self, type_name: str, region: str, az: str, n: int) -> list[NodeRecord]:
+        """Force-interrupt up to ``n`` alive nodes of one capacity pool.
+
+        The chaos-replay hook: targeted interruption injection at the current
+        market time, independent of the capacity process (which ``advance``
+        already models).  Victims are seeded-random, events land in
+        :attr:`interruptions` exactly like capacity-driven reclaims, so the
+        operator cannot tell the difference — which is the point.
+        """
+        i = self._pool_idx(type_name, region, az)
+        alive = self._alive_by_pool.get(i, [])
+        if not alive or n <= 0:
+            return []
+        victims = self._rng.choice(len(alive), size=min(n, len(alive)),
+                                   replace=False)
+        events = []
+        for nid in [alive[v] for v in sorted(victims, reverse=True)]:
+            rec = self._records[nid]
+            rec.end_t = self.now
+            rec.reason = "interrupted"
+            alive.remove(nid)
+            self._used[i] -= 1
+            events.append(rec)
+        self.interruptions.extend(events)
+        return events
+
+    def events_since(self, cursor: int) -> tuple[list[NodeRecord], int]:
+        """Interruption events after ``cursor``; returns (events, new cursor)."""
+        return self.interruptions[cursor:], len(self.interruptions)
 
     # ------------------------------------------------------------------
     # derived vendor metrics

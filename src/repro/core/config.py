@@ -117,6 +117,18 @@ class EngineConfig:
                             precision=self.archive_precision,
                             headroom=self.archive_headroom)
 
+    def build_server(self, **kw):
+        """A :class:`~repro.serve.BatchServer` on this config.
+
+        Extra keyword arguments (``bucket_sizes``, a pre-built ``engine`` or
+        ``cache``, ...) pass through to the constructor; the engine and
+        archive cache it default-constructs both derive from this config, so
+        every layer of the resulting server agrees on one set of knobs —
+        this is how the closed-loop operator builds its serving stack.
+        """
+        from ..serve.server import BatchServer
+        return BatchServer(config=self, **kw)
+
 
 def resolve_engine_config(config: EngineConfig | None,
                           *, stacklevel: int = 3,

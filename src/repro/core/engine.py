@@ -183,6 +183,27 @@ class RecommendationEngine:
         self._use_vectorized = use_vectorized_pool
         self.pool_impl = self.config.pool_impl
         self.score_impl = self.config.score_impl
+        #: optional callable ``(request, recommendation) -> None`` invoked for
+        #: every recommendation this engine returns (both entry points).  The
+        #: closed-loop operator (``repro.operator``) registers issued pools
+        #: into its CMDB through this hook; ``BatchServer`` exposes the same
+        #: attribute of its engine, so one subscription covers direct engine
+        #: calls and the whole serving stack.  A raising sink is a bug in the
+        #: subscriber, never in serving: exceptions are swallowed into a
+        #: warning and the caller still gets its recommendations.
+        self.result_sink = None
+
+    def _emit_results(self, requests, recs) -> None:
+        if self.result_sink is None:
+            return
+        import warnings
+        for req, rec in zip(requests, recs):
+            try:
+                self.result_sink(req, rec)
+            except Exception as err:  # noqa: BLE001 — see result_sink contract
+                warnings.warn(f"result_sink raised {err!r}; recommendation "
+                              "delivery is unaffected", RuntimeWarning,
+                              stacklevel=3)
 
     def score(self, cands: CandidateSet, req: ResourceRequest):
         """Return (combined S, availability AS, cost CS) for all candidates."""
@@ -217,7 +238,7 @@ class RecommendationEngine:
             np.asarray(req.capacity_of(sub), np.float64), req.amount,
             req.max_types)
         hourly = float((sub.prices[idx] * counts).sum())
-        return Recommendation(
+        rec = Recommendation(
             names=sub.names[idx], regions=sub.regions[idx], azs=sub.azs[idx],
             counts=counts, combined=comb[idx], availability=avail[idx],
             cost=cost[idx], hourly_cost=hourly,
@@ -227,6 +248,8 @@ class RecommendationEngine:
                 "solve_time_s": result.solve_time_s,
             },
         )
+        self._emit_results([req], [rec])
+        return rec
 
     def recommend_batch(self, cands: CandidateSet, requests,
                         *, pad_to: int | None = None,
@@ -381,4 +404,38 @@ class RecommendationEngine:
                     "batch_size": batch.batch_size,
                 },
             ))
+        self._emit_results(requests, recs)
         return recs
+
+    def score_archive(self, archive, *, lam: float = scoring.DEFAULT_LAMBDA,
+                      weight: float = 0.5, amount: float = 1.0,
+                      use_cpus: bool = True):
+        """Fresh unfiltered (K,) score rows for an archive's current window.
+
+        One stats-backed tiled dispatch — O(K), never touching the (K, T)
+        window — returning ``(combined, availability, cost)`` float32 rows
+        over the full candidate axis.  This is the operator's re-scoring
+        primitive: as collector ticks roll the archive forward, each
+        reconcile cycle reads the per-candidate availability scores its
+        tracked pools' members currently have, without paying a full
+        recommendation (no Algorithm 1, no per-request masking).
+
+        ``archive`` is any stats-backed operand (``DeviceArchive``, rolling
+        archive, version-pinned snapshot).  K-sharded archives are not
+        supported here — re-score through :meth:`recommend_batch`, which
+        routes them, or score one shard at a time.
+        """
+        if getattr(archive, "is_sharded", False):
+            raise NotImplementedError(
+                "score_archive needs a single-device stats-backed archive; "
+                "sharded operands re-score through recommend_batch")
+        stats = archive.score_stats()
+        mask = np.ones((1, len(archive.host)), bool)
+        comb, avail, cost = _batched_scores(
+            archive.t3_operand, archive.prices, archive.vcpus,
+            archive.memory_gb, mask, np.array([use_cpus]),
+            np.array([weight], np.float32), np.array([lam], np.float32),
+            np.array([amount], np.float32), stats, mask,
+            np.zeros(1, np.int32), score_impl="tiled")
+        return (np.asarray(comb[0]), np.asarray(avail[0]),
+                np.asarray(cost[0]))

@@ -116,7 +116,8 @@ def _ceil_margins(x: np.ndarray, dx: np.ndarray) -> np.ndarray:
 
 
 def pool_decision_margin(comb: np.ndarray, caps: np.ndarray, amount: float,
-                         mask: np.ndarray, bound: float) -> float:
+                         mask: np.ndarray, bound: float, *,
+                         max_types: int | None = None) -> float:
     """Smallest decision margin of Algorithm 1 on the float32 score row.
 
     Replays every comparison the all-prefix scan makes — adjacent score
@@ -126,10 +127,18 @@ def pool_decision_margin(comb: np.ndarray, caps: np.ndarray, amount: float,
     ``bound``.  ``> 1`` certifies that a per-candidate combined-score drift
     of <= ``bound`` cannot change the pool; ``<= 1`` marks a tie.
 
-    Covers the default pool path (no ``max_types`` cap — the cap's
-    score-proportional re-allocation adds boundaries this replay does not
-    model, so quantized-parity suites run with ``max_types=None``).
+    Covers the default pool path only.  A ``max_types`` cap adds
+    score-proportional re-allocation boundaries this replay does not model
+    — rather than certify a margin that ignores them (a silently-wrong
+    "no tie" answer), passing ``max_types`` raises ``NotImplementedError``.
+    Run quantized-parity suites with ``max_types=None``.
     """
+    if max_types is not None:
+        raise NotImplementedError(
+            "pool_decision_margin does not model the max_types "
+            "re-allocation boundaries; a margin computed without them "
+            "could certify a pool that the cap's proportional refill "
+            "would in fact flip — run parity checks with max_types=None")
     if bound == 0.0:
         return np.inf
     if not np.isfinite(bound):
@@ -186,16 +195,20 @@ def pools_identical(a, b) -> bool:
 
 def check_pool_parity(rec_f32, rec_q, comb_f32: np.ndarray,
                       caps: np.ndarray, amount: float, mask: np.ndarray,
-                      bound: float) -> QuantizedParity:
+                      bound: float, *,
+                      max_types: int | None = None) -> QuantizedParity:
     """Apply the tier contract to one request's float32/quantized pool pair.
 
     Returns a :class:`QuantizedParity`; callers assert ``.ok`` — identical
     pools, or a divergence explained (and flagged) by a decision margin
     inside the score bound.  A divergence with ``margin > 1`` leaves
     ``ok = False``: the documented error budget failed to contain the
-    drift, which is exactly what the parity suites must catch.
+    drift, which is exactly what the parity suites must catch.  Requests
+    carrying a ``max_types`` cap are unsupported, as for
+    :func:`pool_decision_margin` (raises ``NotImplementedError``).
     """
-    margin = pool_decision_margin(comb_f32, caps, amount, mask, bound)
+    margin = pool_decision_margin(comb_f32, caps, amount, mask, bound,
+                                  max_types=max_types)
     return QuantizedParity(
         identical=pools_identical(rec_f32, rec_q),
         tie=margin <= 1.0, margin=margin, bound=bound)

@@ -117,6 +117,22 @@ class BatchServer:
         self.stats = ServeStats()
         self._stats_lock = threading.Lock()
 
+    @property
+    def result_sink(self):
+        """The engine's result hook (see ``RecommendationEngine.result_sink``).
+
+        Delegates to ``self.engine`` — one underlying subscription, so a
+        sink set here fires exactly once per recommendation whether the
+        caller went through :meth:`serve`, the admission queue, or the
+        engine directly.  The closed-loop operator registers issued pools
+        through this.
+        """
+        return self.engine.result_sink
+
+    @result_sink.setter
+    def result_sink(self, sink):
+        self.engine.result_sink = sink
+
     def plan_chunks(self, n: int) -> list[tuple[int, int]]:
         """Split ``n`` requests into ``(chunk_len, bucket)`` pieces.
 

@@ -108,17 +108,20 @@ class AdmissionStats:
     and direct ``drain`` callers never lose an increment.
 
     The ledger balances by construction: every submitted request ends in
-    exactly one of ``served`` (full path) or ``shed`` (degraded tier) —
-    ``submitted == served + shed`` once the queue is empty.  ``latency``
-    holds end-to-end submit->resolve times for full-path requests,
-    ``shed_latency`` for degraded ones (resolved at submit, so ~0 unless
-    the caller backdated the arrival).
+    exactly one of ``served`` (full path), ``shed`` (degraded tier), or
+    ``failed`` (its drain's dispatch raised; the ticket resolved carrying
+    the error) — ``submitted == served + shed + failed`` once the queue is
+    empty.  ``latency`` holds end-to-end submit->resolve times for
+    full-path requests, ``shed_latency`` for degraded ones (resolved at
+    submit, so ~0 unless the caller backdated the arrival).
     """
 
     submitted: int = 0
     served: int = 0
     shed: int = 0               # resolved degraded from the PoolCache
+    failed: int = 0             # resolved with their drain's dispatch error
     drains: int = 0
+    failed_drains: int = 0      # drains whose dispatch raised (no ticket hung)
     forced_drains: int = 0      # force=True (shutdown / sync Ticket.result)
     coalesced: int = 0          # rode a *due* drain before their own deadline
     versions: dict = field(default_factory=dict)   # archive key -> #requests
@@ -308,6 +311,12 @@ class AdmissionQueue:
         the remainder pending for the immediately-following drain.
         ``force`` drains everything even when nothing is due (shutdown,
         synchronous ``Ticket.result``).
+
+        A failing dispatch does **not** strand its batch or kill the
+        caller's loop: every popped ticket resolves carrying the error
+        (``Ticket.result`` re-raises it), one ``failed_drains`` is counted,
+        and the drain returns the batch size like any other — the daemon
+        worker and direct callers both live to drain again.
         """
         now = self.clock() if now is None else now
         with self._lock:
@@ -329,17 +338,25 @@ class AdmissionQueue:
             archive = self.resolve_archive()
             recs = self.server.serve(archive, [t.request for t in batch])
         except Exception as err:  # noqa: BLE001 — fail the tickets, not the loop
+            with self._lock:
+                self.stats.drains += 1
+                self.stats.failed_drains += 1
+                self.stats.failed += len(batch)
+                if force:
+                    self.stats.forced_drains += 1
             for t in batch:
                 t._resolve(error=err)
-            raise
+            return len(batch)
         n_early = sum(1 for t in batch if t.deadline > now)
         key = getattr(archive, "key", "?")
         version = getattr(archive, "version", None)
+        stale = bool(getattr(archive, "stale", False))
         done = self.clock()     # after service: end-to-end, not queueing-only
         latencies = []
         for t, rec in zip(batch, recs):
             rec.diagnostics["archive_key"] = key
             rec.diagnostics["degraded"] = False
+            rec.diagnostics["stale_archive"] = stale
             if version is not None:
                 rec.diagnostics["archive_version"] = version
             if self.pool_cache is not None:
@@ -389,5 +406,5 @@ class AdmissionQueue:
                     continue
             try:
                 self.drain()
-            except Exception:  # noqa: BLE001 — tickets already carry the error
-                pass
+            except Exception:  # noqa: BLE001 — belt-and-braces: drain already
+                pass           # resolves its batch and swallows dispatch errors

@@ -144,6 +144,7 @@ class LiveIngestor:
             self.cache.invalidate(self.archive.key)
         self.archive.append(self.collector.column(self._ingested))
         self._ingested += 1
+        self.archive.stale = False
         if self.cache is not None:
             self.cache.put(self.archive)
         return self.archive
@@ -154,3 +155,16 @@ class LiveIngestor:
         for _ in range(n):
             self.ingest_tick()
         return n
+
+    def mark_stale(self) -> None:
+        """Flag the served archive as stale (feed stopped delivering).
+
+        The operator's reconcile loop calls this after its bounded
+        collect/ingest retries are exhausted: the archive keeps serving —
+        old scores beat no scores — but every snapshot taken from here on
+        carries ``stale=True`` and drains stamp a ``stale_archive``
+        diagnostic on their recommendations.  The next successful
+        :meth:`ingest_tick` (or :meth:`prime`) clears the flag.
+        """
+        if self.archive is not None:
+            self.archive.stale = True

@@ -130,6 +130,12 @@ class ArchiveSnapshot:
     #: the parent's per-candidate quantisation step (None on the float32
     #: tier) — never donated, so the reference stays valid across ticks.
     scale: jax.Array | None = None
+    #: True when the parent archive was marked stale at snapshot time (its
+    #: feed stopped delivering ticks — see ``LiveIngestor.mark_stale``).
+    #: Recommendations served off a stale snapshot carry a
+    #: ``stale_archive`` diagnostic so consumers know the scores describe an
+    #: old market, not the current one.
+    stale: bool = False
 
     #: tells the engine to keep the scoring stage tiled even when the
     #: auto threshold would pick dense at this K (no window to re-reduce)
@@ -229,6 +235,12 @@ class RollingDeviceArchive:
         self._stats: scoring.CandidateStats | None = None
         self._t3_logical = None
         self.appends = 0
+        #: staleness flag, owned by the feed (``LiveIngestor`` sets it when
+        #: its collector stops delivering, clears it on the next successful
+        #: tick).  Mutating it does **not** bump :attr:`version` — the
+        #: window really is unchanged; the flag rides into snapshots and the
+        #: serve layer stamps it on recommendation diagnostics.
+        self.stale = False
 
     # -- identity ----------------------------------------------------------
 
@@ -308,7 +320,7 @@ class RollingDeviceArchive:
             key=self.key, version=self.version, host=self.host,
             prices=self.prices, vcpus=self.vcpus, memory_gb=self.memory_gb,
             stats=self.score_stats(), window_len=self._len,
-            precision=self.precision, scale=self.scale)
+            precision=self.precision, scale=self.scale, stale=self.stale)
 
     # -- engine-facing surface --------------------------------------------
 

@@ -1,0 +1,424 @@
+"""Closed-loop operator (``repro.operator``): CMDB reconciliation,
+backoff-guarded ingest, risk-triggered re-recommendation, phased migration,
+and the fault-injected chaos replay.
+
+The load-bearing contracts: a transient feed fault degrades to a stale
+archive (never a dead loop), a failing dispatch strands no admission
+ticket, and under injected interruptions every tracked pool is either
+re-recommended or carrying a migration plan — the reconcile loop converts
+risky recommendations into reliable clusters, observably.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                            SpotMarket, SPSQueryService)
+from repro.core import EngineConfig, ResourceRequest
+from repro.core.survival import fit_survival_model
+from repro.operator import (ChaosReplay, ChaosSchedule, CollectorOutage,
+                            Operator, OperatorConfig, StaleArchiveWarning,
+                            build_migration_plan)
+from repro.stream import AdmissionQueue, LiveIngestor
+
+WINDOW = 8
+
+
+def _world(seed=3, n_targets=32, cycles=WINDOW, period_min=10.0,
+           profile="aws"):
+    mkt = SpotMarket(Catalog(seed=seed, n_regions=2), seed=seed,
+                     profile=profile)
+    svc = SPSQueryService(mkt, n_accounts=3000)
+    step = max(len(mkt.pool_keys) // n_targets, 1)
+    targets = [(t.name, r, az)
+               for (t, r, az) in mkt.pool_keys[::step]][:n_targets]
+    col = DataCollector(svc, targets,
+                        CollectorConfig(period_min=period_min,
+                                        ring_capacity=32))
+    for _ in range(cycles):
+        col.collect_once()
+        mkt.advance(mkt.now + period_min)
+    return mkt, col
+
+
+def _stack(mkt, col, *, op_cfg=None, collect=None):
+    server = EngineConfig().build_server(bucket_sizes=(1, 2, 4))
+    ing = LiveIngestor(col, window=WINDOW, cache=server.cache)
+    ing.prime()
+    op = Operator(server, ing, mkt,
+                  config=op_cfg or OperatorConfig(backoff_base_s=0.0),
+                  collect=collect, sleep=lambda s: None)
+    return server, ing, op
+
+
+def _tick(mkt, col, period_min=10.0):
+    mkt.advance(mkt.now + period_min)
+    col.collect_once()
+
+
+# ---------------------------------------------------------------------------
+# CMDB: registration, adoption, sync
+# ---------------------------------------------------------------------------
+
+def test_result_sink_registers_every_recommendation():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    reqs = [ResourceRequest(cpus=32.0), ResourceRequest(memory_gb=64.0)]
+    server.serve(ing.archive, reqs)
+    assert len(op.cmdb) == 2
+    assert all(not p.active for p in op.cmdb.pools.values())
+    # duplicate signature refreshes, not duplicates
+    server.serve(ing.archive, [ResourceRequest(cpus=32.0)])
+    assert len(op.cmdb) == 2
+    assert op.cmdb.pools[0].rerecommendations == 1
+
+
+def test_launch_adopts_pool_and_sync_observes_interruptions():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    pool = op.launch(ResourceRequest(cpus=48.0))
+    assert pool.active and pool.alive_capacity >= 48.0
+    assert pool.delivered_fraction() == 1.0
+    # reclaim a member's capacity pool behind the CMDB's back
+    victim = pool.alive_members[0]
+    mkt.reclaim(victim.type_name, victim.region, victim.az, 1)
+    deaths = op.cmdb.sync(mkt)
+    assert len(deaths[pool.pool_id]) == 1
+    dead = deaths[pool.pool_id][0]
+    assert not dead.alive and dead.reason == "interrupted"
+    assert pool.interrupted_total == 1
+    # sync is idempotent: the same death is not re-reported
+    assert op.cmdb.sync(mkt) == {}
+
+
+def test_lifetimes_table_censoring():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    pool = op.launch(ResourceRequest(cpus=24.0))
+    m = pool.alive_members[0]
+    mkt.advance(mkt.now + 30.0)
+    mkt.reclaim(m.type_name, m.region, m.az, 1)
+    op.cmdb.sync(mkt)
+    x, dur, ev = op.cmdb.lifetimes(mkt.now)
+    assert len(x) == len(pool.members)
+    assert ev.sum() == 1                      # one interruption event
+    assert (dur > 0).all()
+    # operator-driven terminations are censored, not events
+    alive = pool.alive_members[0]
+    mkt.terminate([alive.node_id])
+    op.cmdb.sync(mkt)
+    _, _, ev2 = op.cmdb.lifetimes(mkt.now)
+    assert ev2.sum() == 1
+
+
+# ---------------------------------------------------------------------------
+# ingest backoff: transient faults retry, exhaustion degrades to stale
+# ---------------------------------------------------------------------------
+
+def test_transient_collect_fault_is_retried_not_stale():
+    mkt, col = _world()
+    fails = {"n": 2}
+
+    def flaky():
+        if fails["n"] > 0:
+            fails["n"] -= 1
+            raise CollectorOutage("transient")
+        col.collect_once()
+
+    server, ing, op = _stack(mkt, col, collect=flaky)
+    mkt.advance(mkt.now + 10.0)
+    op.reconcile_once()
+    assert op.stats.ingest_failures == 2 and op.stats.stale_cycles == 0
+    assert ing.archive.stale is False
+    assert ing.lag == 0                       # the tick landed after retries
+
+
+def test_exhausted_retries_degrade_to_stale_then_recover():
+    mkt, col = _world()
+    down = {"on": True}
+
+    def feed():
+        if down["on"]:
+            raise CollectorOutage("hard outage")
+        col.collect_once()
+
+    cfg = OperatorConfig(backoff_base_s=0.01, max_retries=2)
+    sleeps = []
+    server = EngineConfig().build_server(bucket_sizes=(1, 2))
+    ing = LiveIngestor(col, window=WINDOW, cache=server.cache)
+    ing.prime()
+    op = Operator(server, ing, mkt, config=cfg, collect=feed,
+                  sleep=sleeps.append)
+    v0 = ing.version
+    with pytest.warns(StaleArchiveWarning):
+        op.reconcile_once()
+    assert op.stats.stale_cycles == 1
+    assert op.stats.ingest_failures == 3      # 1 + max_retries attempts
+    assert ing.archive.stale is True and ing.version == v0
+    # exponential backoff with jitter: two sleeps, growing, within ±25%
+    assert len(sleeps) == 2
+    assert 0.0075 <= sleeps[0] <= 0.0125
+    assert 0.015 <= sleeps[1] <= 0.025
+    # second stale cycle: same streak, no second warning
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        op.reconcile_once()
+    assert op.stats.stale_cycles == 2
+    # feed recovers: stale clears, version advances
+    down["on"] = False
+    op.reconcile_once()
+    assert ing.archive.stale is False and ing.version > v0
+
+
+def test_stale_archive_stamps_served_diagnostics():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    ing.mark_stale()
+    q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.0)
+    t = q.submit(ResourceRequest(cpus=16.0))
+    q.drain(force=True)
+    assert t.result().diagnostics["stale_archive"] is True
+    col.collect_once()
+    ing.poll()
+    t2 = q.submit(ResourceRequest(cpus=16.0))
+    q.drain(force=True)
+    assert t2.result().diagnostics["stale_archive"] is False
+
+
+# ---------------------------------------------------------------------------
+# risk -> re-recommendation -> phased migration
+# ---------------------------------------------------------------------------
+
+def test_capacity_loss_triggers_rerecommendation_and_refill():
+    mkt, col = _world()
+    server, ing, op = _stack(
+        mkt, col, op_cfg=OperatorConfig(backoff_base_s=0.0,
+                                        cooldown_cycles=0),
+        collect=col.collect_once)
+    pool = op.launch(ResourceRequest(cpus=48.0))
+    # interrupt over half the roster
+    n_kill = max(1, len(pool.alive_members) // 2 + 1)
+    by_key = pool.alive_by_key()
+    left = n_kill
+    for key, n in by_key.items():
+        if left <= 0:
+            break
+        left -= len(mkt.reclaim(*key, min(n, left)))
+    assert pool.delivered_fraction() == 1.0   # CMDB hasn't synced yet
+    mkt.advance(mkt.now + 10.0)
+    for _ in range(6):
+        op.reconcile_once()
+        if pool.delivered_fraction() >= 1.0 and (
+                pool.plan is None or pool.plan.done):
+            break
+    assert op.stats.rerecommendations >= 1
+    assert op.stats.risk_triggers.get("capacity_lost", 0) >= 1
+    assert op.stats.migrations_planned >= 1
+    assert pool.delivered_fraction() == pytest.approx(1.0)
+
+
+def test_migration_plan_phases_and_quorum_floor():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    pool = op.launch(ResourceRequest(cpus=64.0))
+    target = server.serve(ing.archive, [pool.request])[0]
+    # shrink the roster so the target is guaranteed to differ: deficits to
+    # launch, and (if the rec moved) surplus markets to drain
+    for m in pool.alive_members[: max(2, len(pool.alive_members) // 3)]:
+        mkt.terminate([m.node_id])
+    op.cmdb.sync(mkt)
+    plan = build_migration_plan(
+        pool, target, now=mkt.now, reason="test",
+        max_concurrent_replacements=3, quorum_floor=0.5,
+        catalog=mkt.catalog)
+    assert plan is not None and plan.total_moves >= 2
+    assert all(ph.moves <= 3 for ph in plan.phases)
+    # replay the phases against a projected roster: capacity never dips
+    # below the floor, and launches always precede retirements in a phase
+    alive = {m.node_id: m.capacity for m in pool.alive_members}
+    cap = sum(alive.values())
+    floor = 0.5 * pool.amount
+    for ph in plan.phases:
+        for (ty, _, _), n in ph.launches:
+            cap += n * mkt.catalog.get(ty).vcpus
+        for nid in ph.retire_node_ids:
+            cap -= alive[nid]
+            assert cap >= floor
+
+
+def test_migration_plan_prefers_uncorrelated_markets():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    pool = op.launch(ResourceRequest(cpus=32.0))
+    target = server.serve(ing.archive, [pool.request])[0]
+    # mark every key of the target correlated except one
+    keys = [(str(t), str(r), str(a)) for t, r, a in
+            zip(target.names, target.regions, target.azs)]
+    fams = {k: mkt.catalog.get(k[0]).family for k in keys}
+    correlated = {(fams[k], k[2]) for k in keys[1:]}
+    # retire everything: plan from an empty roster so every key is a deficit
+    for m in pool.alive_members:
+        mkt.terminate([m.node_id])
+    op.cmdb.sync(mkt)
+    plan = build_migration_plan(
+        pool, target, now=mkt.now, reason="test",
+        max_concurrent_replacements=2, quorum_floor=0.0,
+        catalog=mkt.catalog, correlated=correlated)
+    assert plan is not None
+    first_key = plan.phases[0].launches[0][0]
+    assert (fams[tuple(first_key)], first_key[2]) not in correlated
+
+
+# ---------------------------------------------------------------------------
+# survival model
+# ---------------------------------------------------------------------------
+
+def test_survival_model_degenerate_and_direction():
+    # zero events: flat survival, certain at every horizon
+    m0 = fit_survival_model([50.0, 60.0], [10.0, 20.0], [0, 0])
+    assert m0.n_events == 0
+    assert m0.survival(15.0, 55.0) == pytest.approx(1.0)
+    # higher availability score must predict better survival (HR < 1)
+    rng = np.random.default_rng(0)
+    x = rng.uniform(10, 90, 200)
+    dur = rng.exponential(50 * np.exp(0.03 * (x - 50)))
+    m = fit_survival_model(x, dur, np.ones(200, bool))
+    assert m.cox.hazard_ratio < 1.0
+    s_hi, s_lo = m.survival(30.0, 90.0), m.survival(30.0, 10.0)
+    assert s_hi > s_lo
+
+
+def test_score_archive_matches_recommendation_scores():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col)
+    comb, avail, cost = server.engine.score_archive(ing.archive)
+    host = ing.archive.host
+    assert comb.shape == avail.shape == cost.shape == (len(host),)
+    assert np.isfinite(comb).all()
+    rec = server.serve(ing.archive, [ResourceRequest(cpus=64.0)])[0]
+    idx = {(str(t), str(r), str(a)): i for i, (t, r, a) in
+           enumerate(zip(host.names, host.regions, host.azs))}
+    for ty, rg, az, a_s in zip(rec.names, rec.regions, rec.azs,
+                               rec.availability):
+        np.testing.assert_allclose(
+            avail[idx[(str(ty), str(rg), str(az))]], a_s,
+            rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# satellite: failing drains resolve tickets and keep the worker alive
+# ---------------------------------------------------------------------------
+
+def test_failing_drain_resolves_tickets_and_worker_survives():
+    mkt, col = _world()
+    server, ing, _ = _stack(mkt, col)
+    calls = {"n": 0}
+    real_serve = server.serve
+
+    def raise_on_second(target, requests, **kw):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected: dispatch died mid-drain")
+        return real_serve(target, requests, **kw)
+
+    server.serve = raise_on_second
+    q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.01)
+    q.start()
+    try:
+        t1 = q.submit(ResourceRequest(cpus=16.0))
+        assert t1.result(timeout=30.0).num_types >= 1
+        t2 = q.submit(ResourceRequest(cpus=24.0))     # 2nd drain: boom
+        with pytest.raises(RuntimeError, match="injected"):
+            t2.result(timeout=30.0)
+        assert q.running                              # worker survived
+        t3 = q.submit(ResourceRequest(cpus=32.0))     # and still serves
+        assert t3.result(timeout=30.0).num_types >= 1
+    finally:
+        q.stop()
+    assert q.stats.failed_drains == 1 and q.stats.failed == 1
+    assert q.stats.submitted == q.stats.served + q.stats.shed + q.stats.failed
+    assert all(t.done for t in (t1, t2, t3))
+
+
+# ---------------------------------------------------------------------------
+# satellite: azure missing-response gaps through the rolling archive
+# ---------------------------------------------------------------------------
+
+def test_azure_gap_ticks_keep_rolling_stats_finite():
+    mkt, col = _world(seed=11, profile="azure", cycles=WINDOW)
+    server, ing, _ = _stack(mkt, col)
+    keys = set()
+    for _ in range(12):
+        _tick(mkt, col)
+        ing.poll()
+        keys.add(ing.archive.key)
+        stats = ing.archive.score_stats()
+        for a in stats:
+            assert np.isfinite(np.asarray(a)).all()
+    # every tick produced a distinct versioned key (gap ticks included)
+    assert len(keys) == 12
+    comb, avail, cost = server.engine.score_archive(ing.archive)
+    assert np.isfinite(comb).all() and np.isfinite(avail).all()
+    assert np.isfinite(cost).all()
+
+
+def test_azure_gap_tick_invalidates_cached_version():
+    mkt, col = _world(seed=13, profile="azure", cycles=WINDOW)
+    server, ing, _ = _stack(mkt, col)
+    # T3Estimator holds the last estimate through a missing response, so a
+    # gap tick is a normal column append: old key out, new key in
+    old_key = ing.archive.key
+    assert server.cache._entries.get(old_key) is ing.archive
+    _tick(mkt, col)
+    ing.poll()
+    assert old_key not in server.cache._entries
+    assert server.cache._entries.get(ing.archive.key) is ing.archive
+
+
+# ---------------------------------------------------------------------------
+# chaos replay, end to end
+# ---------------------------------------------------------------------------
+
+def test_chaos_replay_full_fault_menu():
+    sched = ChaosSchedule(
+        collector_outages=frozenset({2}), delayed_ticks=frozenset({4}),
+        reclaims={1: 4, 5: 6}, failing_drains=frozenset({3}))
+    rep = ChaosReplay(seed=7, n_targets=24, window=6, warmup_cycles=6,
+                      cycles=8, schedule=sched).run("everything")
+    assert rep.stranded_tickets == 0
+    assert rep.worker_alive_at_end
+    assert rep.unresolved_pools == 0
+    assert rep.interruptions >= 1
+    assert rep.rerecommendations >= 1
+    assert rep.failed_drains >= 1 and rep.failed_tickets == rep.failed_drains
+    assert rep.stale_cycles >= 1
+    assert 0.0 < rep.delivered_availability <= 1.0
+
+
+def test_chaos_replay_no_fault_control_delivers_recommended():
+    rep = ChaosReplay(seed=7, n_targets=24, window=6, warmup_cycles=6,
+                      cycles=8).run("no_fault")
+    assert rep.stranded_tickets == 0 and rep.worker_alive_at_end
+    assert rep.failed_drains == 0 and rep.stale_cycles == 0
+    assert rep.delivered_availability >= rep.recommended_availability - 0.05
+
+
+def test_operator_daemon_thread_lifecycle():
+    mkt, col = _world()
+    server, ing, op = _stack(mkt, col, collect=col.collect_once,
+                             op_cfg=OperatorConfig(backoff_base_s=0.0,
+                                                   period_s=0.01))
+    op.start()
+    try:
+        assert op.running
+        deadline = threading.Event()
+        for _ in range(200):
+            if op.stats.cycles >= 3:
+                break
+            deadline.wait(0.02)
+        assert op.stats.cycles >= 3
+    finally:
+        op.stop()
+    assert not op.running

@@ -422,3 +422,20 @@ def test_tie_is_flagged_not_hidden():
     exact = qz.pool_decision_margin(comb, np.array([4.0, 7.0, 13.0]),
                                     48.0, mask, bound=1e-9)
     assert exact == 0.0
+
+
+def test_max_types_margin_is_refused_not_silently_wrong():
+    """``max_types`` re-allocation boundaries are not modelled by the
+    decision-margin replay — asking for a margin there must raise, not
+    certify a pool the cap's proportional refill could flip."""
+    comb = np.array([10.0, 7.0, 3.0])
+    caps = np.array([3.0, 7.0, 13.0])
+    mask = np.ones(3, bool)
+    with pytest.raises(NotImplementedError, match="max_types"):
+        qz.pool_decision_margin(comb, caps, 50.0, mask, 0.5, max_types=2)
+    with pytest.raises(NotImplementedError, match="max_types"):
+        qz.check_pool_parity(None, None, comb, caps, 50.0, mask, 0.5,
+                             max_types=2)
+    # the default path is unchanged
+    assert qz.pool_decision_margin(comb, caps, 50.0, mask, 0.01,
+                                   max_types=None) > 1.0
