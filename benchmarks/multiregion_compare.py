@@ -1,0 +1,285 @@
+"""Multi-region SpotVista vs SpotFleet/SpotVerse comparison (paper §6.4).
+
+Replays the paper's headline evaluation through the multicloud scenario
+engine (``repro.multicloud``): for each setup — single-region, multi-AZ,
+multi-region, multi-cloud — every policy faces an identically-seeded world
+and the same forced-interruption schedule; SpotVista runs the full
+closed loop (region-sharded serving + operator refill via the PR-8 chaos
+harness) while the SpotFleet / SpotVerse baselines select once on
+instantaneous signals and never look back.
+
+Hard gates (enforced in every mode, not just ``--check``):
+
+- **parity**: cross-region recommendation via one shard per region is
+  bit-identical — pools *and* score rows — to a single-device run over the
+  equivalent merged catalog, for snapshot and rolling archives, over
+  2 vendors x 3 regions each;
+- **availability**: SpotVista delivered availability >= the SpotFleet-style
+  baseline in every setup, with a non-empty interruption schedule;
+- **budget**: the probe scheduler never exceeds the fixed global query
+  budget as AWS regions scale 1 -> 4 -> 17, and realized staleness stays
+  within the ceil(targets / budget) bound.
+
+Modes::
+
+    python -m benchmarks.multiregion_compare                 # full sizes,
+        # writes the committed benchmarks/BENCH_multiregion.json artifact
+    python -m benchmarks.multiregion_compare --smoke         # short replays
+    python -m benchmarks.multiregion_compare --smoke --check \
+        benchmarks/BENCH_multiregion.json                    # CI lane
+
+``run()`` (the ``benchmarks.run`` entry) emits the smoke-size rows.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.engine import RecommendationEngine
+from repro.core.types import ResourceRequest
+from repro.multicloud import (SETUPS, ScenarioConfig, ScenarioEngine,
+                              budget_scaling, compare_setup)
+from repro.serve import DeviceArchive
+from repro.shard import ShardedArchive
+
+from ._world import row
+
+ARTIFACT = Path(__file__).resolve().parent / "BENCH_multiregion.json"
+
+AVAIL_REGRESSION = 0.02   # --check: spotvista availability may drop this much
+
+FULL = dict(period_min=30.0, types_per_region=6, window=12, warmup=16,
+            cycles=24, amount=96.0)
+SMOKE = dict(period_min=30.0, types_per_region=4, window=8, warmup=10,
+             cycles=12, amount=48.0)
+
+BUDGET_FULL = dict(region_counts=(1, 4, 17), budget=64, cycles=20)
+BUDGET_SMOKE = dict(region_counts=(1, 4, 17), budget=32, cycles=8)
+
+#: parity world: 2 vendors x 3 regions each = 6 region shards
+PARITY = dict(vendors=("aws", "gcp"), regions_per_vendor=3,
+              types_per_region=4, azs_per_region=1, period_min=10.0)
+
+
+# -- parity gate: region shards == single merged-catalog device -------------
+
+def _rec_equal(a, b) -> bool:
+    return (np.array_equal(a.names, b.names)
+            and np.array_equal(a.counts, b.counts)
+            and np.array_equal(a.combined, b.combined)
+            and np.array_equal(a.availability, b.availability)
+            and np.array_equal(a.cost, b.cost)
+            and a.hourly_cost == b.hourly_cost)
+
+
+def parity_failures(seed: int = 0, warmup: int = 10,
+                    window: int = 8) -> list[str]:
+    """Bit-identical cross-region serving, snapshot and rolling paths."""
+    eng = ScenarioEngine(ScenarioConfig(seed=seed, **PARITY))
+    eng.warmup(warmup)
+    engine = RecommendationEngine()
+    reqs = [ResourceRequest(cpus=24.0, weight=0.3),
+            ResourceRequest(cpus=96.0, weight=0.7, lam=0.2),
+            ResourceRequest(memory_gb=128.0, weight=0.5)]
+    fails = []
+
+    cands = eng.collector.to_candidate_set(window=window)
+    single_snap = engine.recommend_batch(
+        cands, reqs, archive=DeviceArchive.stage(cands))
+    sharded_snap = engine.recommend_batch(
+        cands, reqs,
+        archive=ShardedArchive.stage(cands, bounds=eng.region_bounds))
+    for i, (a, b) in enumerate(zip(sharded_snap, single_snap)):
+        if not _rec_equal(a, b):
+            fails.append(f"parity/snapshot: request {i} diverged from the "
+                         "single merged-catalog run")
+
+    sharded_ing = eng.build_ingestor(window=window, sharded=True)
+    single_ing = eng.build_ingestor(window=window, sharded=False,
+                                    name="multicloud-single")
+    sharded_ing.prime()
+    single_ing.prime()
+    for tick in range(3):
+        eng.warmup(1)
+        sharded_ing.poll()
+        single_ing.poll()
+        a_batch = engine.recommend_batch(
+            sharded_ing.archive.host, reqs, archive=sharded_ing.archive)
+        b_batch = engine.recommend_batch(
+            single_ing.archive.host, reqs, archive=single_ing.archive)
+        for i, (a, b) in enumerate(zip(a_batch, b_batch)):
+            if not _rec_equal(a, b):
+                fails.append(f"parity/rolling: tick {tick} request {i} "
+                             "diverged from the single-device ring")
+    return fails
+
+
+# -- availability + budget gates --------------------------------------------
+
+def _gate_failures(compare: dict[str, dict[str, dict]],
+                   budget_rows: list[dict]) -> list[str]:
+    """Every hard acceptance gate, one message per violation."""
+    fails = []
+    for setup, results in compare.items():
+        sv, sf = results["spotvista"], results["spotfleet"]
+        if sv["interruptions"] == 0:
+            fails.append(f"{setup}: reclaim schedule injected nothing")
+        if sv["availability"] < sf["availability"]:
+            fails.append(
+                f"{setup}: spotvista availability {sv['availability']:.4f} "
+                f"below spotfleet baseline {sf['availability']:.4f}")
+    for r in budget_rows:
+        if r["max_queries_per_cycle"] > r["budget"]:
+            fails.append(
+                f"budget: {r['regions']} regions issued "
+                f"{r['max_queries_per_cycle']} queries in one cycle "
+                f"(budget {r['budget']})")
+        if r["max_staleness"] > r["staleness_bound"]:
+            fails.append(
+                f"budget: {r['regions']} regions saw staleness "
+                f"{r['max_staleness']} beyond the "
+                f"ceil(K/budget)={r['staleness_bound']} bound")
+    return fails
+
+
+def _run_compare(size: dict) -> tuple[dict[str, dict[str, dict]],
+                                      dict[str, float]]:
+    out, walls = {}, {}
+    for setup in SETUPS:
+        t0 = time.perf_counter()
+        results = compare_setup(setup, **size)
+        walls[setup] = time.perf_counter() - t0
+        out[setup] = {p: r.to_dict() for p, r in results.items()}
+    return out, walls
+
+
+def _report_rows(compare: dict[str, dict[str, dict]],
+                 walls: dict[str, float],
+                 budget_rows: list[dict]) -> list[str]:
+    lines = []
+    for setup, results in compare.items():
+        for policy, r in results.items():
+            lines.append(row(
+                f"multiregion/{setup}/{policy}",
+                walls[setup] * 1e6 / len(results),
+                availability=round(r["availability"], 4),
+                savings_pct=round(r["savings_pct"], 2),
+                interruptions=r["interruptions"],
+                launched=r["launched"]))
+    for r in budget_rows:
+        lines.append(row(
+            f"multiregion/budget/{r['regions']}regions", 0.0,
+            targets=r["targets"], budget=r["budget"],
+            max_queries=r["max_queries_per_cycle"],
+            mean_staleness=round(r["mean_staleness"], 2),
+            max_staleness=r["max_staleness"],
+            staleness_bound=r["staleness_bound"]))
+    return lines
+
+
+def _run_all(size: dict, budget: dict):
+    fails = parity_failures()
+    compare, walls = _run_compare(size)
+    budget_rows = budget_scaling(
+        budget["region_counts"], budget=budget["budget"],
+        cycles=budget["cycles"])
+    fails += _gate_failures(compare, budget_rows)
+    return compare, walls, budget_rows, fails
+
+
+def run() -> list[str]:
+    """benchmarks.run entry: smoke-size comparison, gates enforced."""
+    compare, walls, budget_rows, fails = _run_all(SMOKE, BUDGET_SMOKE)
+    if fails:
+        raise AssertionError("; ".join(fails))
+    return _report_rows(compare, walls, budget_rows)
+
+
+def _payload(compare, walls, budget_rows, size: dict) -> dict:
+    # smoke-size runs ride along so --check (which runs smoke sizes) has a
+    # like-for-like availability reference
+    smoke_compare, smoke_walls, smoke_budget, smoke_fails = _run_all(
+        SMOKE, BUDGET_SMOKE)
+    return {
+        "meta": {**size,
+                 "smoke": SMOKE, "budget": BUDGET_FULL,
+                 "budget_smoke": BUDGET_SMOKE, "parity_world": {
+                     k: list(v) if isinstance(v, tuple) else v
+                     for k, v in PARITY.items()}},
+        "setups": {s: {p: {**r, "wall_s": round(walls[s], 2)}
+                       for p, r in results.items()}
+                   for s, results in compare.items()},
+        "budget_scaling": budget_rows,
+        "smoke_setups": smoke_compare,
+        "smoke_budget_scaling": smoke_budget,
+        "gates_passed": not (_gate_failures(compare, budget_rows)
+                             or smoke_fails),
+    }
+
+
+def _check(artifact: Path) -> int:
+    committed = json.loads(artifact.read_text())
+    if not committed.get("gates_passed", False):
+        print("# FAIL: committed artifact recorded failing gates",
+              file=sys.stderr)
+        return 1
+    compare, walls, budget_rows, fails = _run_all(SMOKE, BUDGET_SMOKE)
+    for line in _report_rows(compare, walls, budget_rows):
+        print(line)
+    refs = committed.get("smoke_setups", committed["setups"])
+    for setup, results in compare.items():
+        ref = refs.get(setup, {}).get("spotvista")
+        if ref is None:
+            fails.append(f"{setup}: spotvista missing from artifact")
+            continue
+        floor = ref["availability"] - AVAIL_REGRESSION
+        got = results["spotvista"]["availability"]
+        if got < floor:
+            fails.append(
+                f"{setup}: spotvista availability {got:.4f} regressed below "
+                f"committed {ref['availability']:.4f} - {AVAIL_REGRESSION}")
+    if fails:
+        for f in fails:
+            print(f"# FAIL: {f}", file=sys.stderr)
+        return 1
+    print("# multiregion compare check ok", file=sys.stderr)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="short replays only, no artifact write")
+    ap.add_argument("--check", type=Path, default=None,
+                    help="compare against a committed BENCH_multiregion.json "
+                         "and exit non-zero on gate violation/regression")
+    ap.add_argument("--out", type=Path, default=ARTIFACT,
+                    help="artifact path for the full comparison")
+    args = ap.parse_args()
+
+    if args.check is not None:
+        raise SystemExit(_check(args.check))
+    print("name,us_per_call,derived")
+    if args.smoke:
+        for line in run():
+            print(line)
+        return
+    compare, walls, budget_rows, fails = _run_all(FULL, BUDGET_FULL)
+    for line in _report_rows(compare, walls, budget_rows):
+        print(line)
+    if fails:
+        for f in fails:
+            print(f"# FAIL: {f}", file=sys.stderr)
+        raise SystemExit(1)
+    args.out.write_text(json.dumps(
+        _payload(compare, walls, budget_rows, FULL), indent=2) + "\n")
+    print(f"# wrote {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,7 @@ MODULES = [
     "shard_scaling",
     "latency_slo",
     "operator_replay",
+    "multiregion_compare",
     "kernels_micro",
     "roofline",
 ]

@@ -3,6 +3,14 @@
 Stands in for the vendor's offering catalog.  Deterministic given a seed, so
 every experiment is reproducible.  Scale mirrors the paper's datasets
 (~100-1000 instance types across up to 17 regions).
+
+The default tables (:data:`CATEGORIES`, :data:`DEFAULT_REGIONS`,
+:data:`REGION_UTC_OFFSET`) model an AWS-like offering; the multi-vendor
+scenario engine (``repro.multicloud``) builds per-vendor catalogs by passing
+its own ``categories`` / ``regions`` / ``utc_offsets`` tables plus a
+``vendor`` tag that salts every deterministic draw, so two vendors (or two
+regions of one vendor) with structurally identical configs never share a
+price or capacity trace.
 """
 from __future__ import annotations
 
@@ -62,17 +70,37 @@ class InstanceType:
 
 
 class Catalog:
-    """Deterministic instance catalog + spot pricing."""
+    """Deterministic instance catalog + spot pricing.
+
+    ``vendor`` (optional) salts every deterministic draw — with it set, two
+    catalogs that differ only in vendor produce distinct price fields.
+    ``categories`` / ``utc_offsets`` override the AWS-like default tables so
+    a vendor profile can bring its own family names and region geography;
+    unknown regions fall back to UTC offset 0 as before.  All three default
+    to the historical behaviour, so existing seeds reproduce bit-for-bit.
+    """
 
     def __init__(self, seed: int = 0, regions: dict[str, int] | None = None,
-                 n_regions: int | None = None):
+                 n_regions: int | None = None, *, vendor: str | None = None,
+                 categories: dict | None = None,
+                 utc_offsets: dict[str, float] | None = None):
         self.seed = seed
+        self.vendor = vendor
+        self.categories = dict(categories) if categories is not None \
+            else CATEGORIES
+        self._offsets = dict(REGION_UTC_OFFSET)
+        if utc_offsets is not None:
+            self._offsets.update(utc_offsets)
+        # every deterministic draw hashes through this salt; vendor=None
+        # keeps the pre-multicloud key shape (and therefore every committed
+        # benchmark trace) bit-identical
+        self._salt = str(seed) if vendor is None else f"{seed}:{vendor}"
         regions = dict(regions or DEFAULT_REGIONS)
         if n_regions is not None:
             regions = dict(list(regions.items())[:n_regions])
         self.regions = regions
         self.types: list[InstanceType] = []
-        for cat, spec in CATEGORIES.items():
+        for cat, spec in self.categories.items():
             for fam in spec["families"]:
                 for size, vcpus in SIZES.items():
                     self.types.append(InstanceType(
@@ -91,6 +119,10 @@ class Catalog:
     def azs(self, region: str) -> list[str]:
         return [f"{region}{chr(ord('a') + i)}" for i in range(self.regions[region])]
 
+    def utc_offset(self, region: str) -> float:
+        """UTC offset (hours) driving the region's local-nighttime peak."""
+        return self._offsets.get(region, 0)
+
     def pools(self) -> list[tuple[InstanceType, str, str]]:
         """All (type, region, az) capacity pools."""
         out = []
@@ -102,17 +134,18 @@ class Catalog:
 
     def spot_price(self, type_name: str, region: str) -> float:
         """$/hr.  Spot = on-demand * (1 - discount), discount in [0.55, 0.88],
-        deterministic per (type, region, seed).  Static over time, mirroring
-        the post-2017 low-volatility pricing regime the paper describes."""
+        deterministic per (vendor, type, region, seed).  Static over time,
+        mirroring the post-2017 low-volatility pricing regime the paper
+        describes."""
         t = self._by_name[type_name]
-        od = CATEGORIES[t.category]["od_per_vcpu"] * t.vcpus
-        u = _stable_unit(f"price:{self.seed}:{type_name}:{region}")
+        od = self.categories[t.category]["od_per_vcpu"] * t.vcpus
+        u = _stable_unit(f"price:{self._salt}:{type_name}:{region}")
         discount = 0.55 + 0.33 * u
-        region_mult = 1.0 + 0.25 * _stable_unit(f"regionprice:{self.seed}:{region}")
+        region_mult = 1.0 + 0.25 * _stable_unit(f"regionprice:{self._salt}:{region}")
         return od * (1.0 - discount) * region_mult
 
     def on_demand_price(self, type_name: str, region: str) -> float:
         t = self._by_name[type_name]
-        od = CATEGORIES[t.category]["od_per_vcpu"] * t.vcpus
-        region_mult = 1.0 + 0.25 * _stable_unit(f"regionprice:{self.seed}:{region}")
+        od = self.categories[t.category]["od_per_vcpu"] * t.vcpus
+        region_mult = 1.0 + 0.25 * _stable_unit(f"regionprice:{self._salt}:{region}")
         return od * region_mult

@@ -37,12 +37,24 @@ class CollectorConfig:
     #: live-ingestion feed) is an O(K) slice.  None disables the ring.
     ring_capacity: int | None = None
     #: storage dtype of the host ring.  T3 values are small integer node
-    #: counts (``<= t_max``), so "float32" or "int16" hold them exactly at
-    #: half / a quarter of the float64 footprint — at SpotLake-scale K the
-    #: host ring is the collector's dominant allocation.  ``column`` /
-    #: ``to_candidate_set`` still hand out float64, so every consumer sees
-    #: bit-identical values regardless of the ring dtype.
+    #: counts (``<= t_max``), so "float32" / "int16" / "int8" hold them
+    #: exactly at 1/2, 1/4 and 1/8 of the float64 footprint — at
+    #: (vendor x region x type) catalog scale the host ring is the
+    #: collector's dominant allocation, and "int8" is what lets K grow with
+    #: the multi-vendor catalog.  ``column`` / ``to_candidate_set`` still
+    #: hand out float64, so every consumer sees bit-identical values
+    #: regardless of the ring dtype.  "int8" requires ``t_max <= 127``
+    #: (validated at construction).
     ring_dtype: str = "float64"
+    #: optional :class:`repro.core.usqs.BudgetedProbeScheduler` (or anything
+    #: with a ``plan(cycle) -> list[int]`` of target indices).  When set,
+    #: each :meth:`DataCollector.collect_once` probes only the planned
+    #: targets; the rest carry their current estimate forward without
+    #: spending any query budget.  Indices are positions in the collector's
+    #: ``targets`` list.  Like the estimators, scheduler state is a monotone
+    #: accumulator — a retried tick after a mid-collection raise re-plans
+    #: from current staleness.
+    scheduler: object | None = None
     #: fault-injection hook, called as ``fault_hook(tick)`` at the start of
     #: every :meth:`DataCollector.collect_once`.  Raising aborts the tick
     #: before anything is probed or appended — the chaos adapter
@@ -50,6 +62,18 @@ class CollectorConfig:
     #: operator's reconcile loop is what absorbs the raise (bounded retry +
     #: backoff, then a stale-archive warning).  ``None`` disables it.
     fault_hook: object | None = None
+
+    _RING_DTYPES = ("float64", "float32", "int16", "int8")
+
+    def __post_init__(self):
+        if self.ring_dtype not in self._RING_DTYPES:
+            raise ValueError(
+                f"ring_dtype must be one of {self._RING_DTYPES}, "
+                f"got {self.ring_dtype!r}")
+        if self.ring_dtype == "int8" and self.t_max > 127:
+            raise ValueError(
+                f"int8 host ring cannot hold T3 values up to t_max={self.t_max} "
+                f"exactly (int8 max is 127)")
 
 
 class DataCollector:
@@ -96,10 +120,24 @@ class DataCollector:
         """
         if self.cfg.fault_hook is not None:
             self.cfg.fault_hook(self._tick)
+        planned = (set(self.cfg.scheduler.plan(self._tick))
+                   if self.cfg.scheduler is not None else None)
         t3_new: list[int] = []
         t2_new: list[int] = []
-        for tgt in self.targets:
+        for k, tgt in enumerate(self.targets):
             ty, rg, az = tgt
+            if planned is not None and k not in planned:
+                # outside this cycle's probe budget: carry the current
+                # estimate forward, spend no queries
+                if self.cfg.mode == "usqs":
+                    t3_new.append(self._estimators[tgt].t3())
+                    t2_new.append(-1)
+                else:
+                    prev3 = self.t3_archive[tgt]
+                    prev2 = self.t2_archive[tgt]
+                    t3_new.append(prev3[-1] if prev3 else 0)
+                    t2_new.append(prev2[-1] if prev2 else -1)
+                continue
             if self.cfg.mode == "usqs":
                 tc = self._samplers[tgt].next_target()
                 sps = self.service.query(ty, rg, az, tc)

@@ -15,7 +15,16 @@ deterministic seeded process calibrated to the paper's measurements:
   AZs (Fig. 9);
 - family-level phase/amplitude sharing so adjacent sizes correlate (Fig. 7);
 - an "azure" profile with weak seasonality, dominant trend, amplitude regime
-  shifts and missing query responses (§6.2, Table 1, §8).
+  shifts and missing query responses (§6.2, Table 1, §8);
+- a "gcp" profile between the two: moderate seasonality, mild trend, higher
+  noise, no missing responses (preemption stats are published, not sampled).
+
+Multi-vendor worlds pass ``vendor=`` so every deterministic draw — pool
+parameters, missing-response coin flips, reclaim victim selection — is salted
+by ``(seed, profile, vendor)``.  Two regions built from structurally identical
+configs therefore never replay the same capacity trace.  ``vendor=None``
+(default) keeps the historical key shape, so committed benchmark artifacts
+stay bit-identical.
 
 SPS semantics: for a request of n nodes against free capacity f,
 SPS = 3 if f >= n, 2 if f >= ceil(n/2), else 1 — monotone non-increasing in n
@@ -77,15 +86,25 @@ class PoolKey:
 class SpotMarket:
     """Deterministic, seeded spot-market simulator."""
 
-    def __init__(self, catalog: Catalog, seed: int = 0, profile: str = "aws"):
-        assert profile in ("aws", "azure")
+    def __init__(self, catalog: Catalog, seed: int = 0, profile: str = "aws",
+                 *, vendor: str | None = None):
+        assert profile in ("aws", "azure", "gcp")
         self.catalog = catalog
         self.seed = seed
         self.profile = profile
+        self.vendor = vendor
         self.now = 0.0  # minutes
         self._records: list[NodeRecord] = []
         self._alive_by_pool: dict[int, list[int]] = {}
-        self._rng = np.random.default_rng(seed ^ 0x5F0CAFE)
+        if vendor is None:
+            rng_seed = seed ^ 0x5F0CAFE
+        else:
+            # (seed, vendor, region set) → independent victim-selection
+            # streams per region world, stable across process restarts
+            key = f"{seed}:{vendor}:{','.join(sorted(catalog.regions))}"
+            digest = hashlib.blake2b(key.encode(), digest_size=8).digest()
+            rng_seed = int.from_bytes(digest, "little")
+        self._rng = np.random.default_rng(rng_seed)
         #: append-only interruption event log.  ``advance`` (capacity-driven
         #: reclaims) and :meth:`reclaim` (targeted chaos reclaims) both append
         #: here, so a consumer that missed an ``advance`` return value — the
@@ -113,7 +132,8 @@ class SpotMarket:
         regime_amp = np.ones(P)       # azure amplitude regime-shift factor
         regime_period = np.full(P, np.inf)
 
-        s = f"{seed}:{profile}"
+        s = f"{seed}:{profile}" if vendor is None else f"{seed}:{profile}:{vendor}"
+        self._salt = s
         for i, (t, r, az) in enumerate(pools):
             fam_key = f"{s}:fam:{t.family}:{az}"
             u_fam = _hash_units(fam_key, 4)
@@ -130,12 +150,17 @@ class SpotMarket:
             size_factor = (8.0 / t.vcpus) ** 0.45               # small sizes more plentiful
             base[i] = fam_base * size_factor * (0.8 + 0.4 * u_pool[0])
 
-            offset_min = REGION_UTC_OFFSET.get(r, 0) * 60.0
+            offset_min = catalog.utc_offset(r) * 60.0
             if profile == "aws":
                 daily_amp[i] = 0.25 + 0.35 * u_fam[2]
                 weekly_amp[i] = 0.03 + 0.07 * u_pool[1]
                 trend[i] = (u_pool[2] - 0.5) * 2e-6 * base[i]
                 noise_amp[i] = 0.02 + 0.06 * u_pool[3]
+            elif profile == "gcp":  # moderate seasonality, mild trend, noisy
+                daily_amp[i] = 0.15 + 0.20 * u_fam[2]
+                weekly_amp[i] = 0.02 + 0.05 * u_pool[1]
+                trend[i] = (u_pool[2] - 0.5) * 8e-6 * base[i]
+                noise_amp[i] = 0.05 + 0.10 * u_pool[3]
             else:  # azure: weak seasonality, strong trend, regime shifts, noise
                 daily_amp[i] = 0.02 + 0.10 * u_fam[2]
                 weekly_amp[i] = 0.02 + 0.05 * u_pool[1]
@@ -158,7 +183,7 @@ class SpotMarket:
         self._noise_phase = noise_phase
         self._regime_amp = regime_amp
         self._regime_period = regime_period
-        self._missing_rate = 0.0 if profile == "aws" else 0.05
+        self._missing_rate = 0.05 if profile == "azure" else 0.0
 
     # ------------------------------------------------------------------
     # capacity field
@@ -204,7 +229,9 @@ class SpotMarket:
         """Vendor SPS endpoint.  Returns None for missing responses (azure)."""
         t = self.now if t is None else t
         if self._missing_rate > 0:
-            u = _hash_units(f"{self.seed}:miss:{type_name}:{az}:{int(t)}", 1)[0]
+            miss_salt = self.seed if self.vendor is None \
+                else f"{self.seed}:{self.vendor}"
+            u = _hash_units(f"{miss_salt}:miss:{type_name}:{az}:{int(t)}", 1)[0]
             if u < self._missing_rate:
                 return None
         f = self.free(t, np.array([self._pool_idx(type_name, region, az)]))[0]

@@ -33,9 +33,17 @@ class SPSQueryService:
     """Front door to :meth:`SpotMarket.sps`, enforcing account scenario quotas."""
 
     def __init__(self, market: SpotMarket, n_accounts: int = 66,
-                 scenario_limit: int = 50):
+                 scenario_limit: int = 50,
+                 region_limits: dict[str, int] | None = None):
         self.market = market
         self.scenario_limit = scenario_limit
+        #: optional per-region cap on distinct scenarios per rolling 24h,
+        #: pooled across accounts — models vendors that rate-limit the
+        #: *endpoint* per region rather than per account (Azure/GCP style)
+        self.region_limits = dict(region_limits or {})
+        self._region_log: dict[str, _Account] = {
+            r: _Account(f"region-{r}") for r in self.region_limits
+        }
         self.accounts = [_Account(f"acct-{i}") for i in range(n_accounts)]
         self.total_queries = 0
 
@@ -43,6 +51,15 @@ class SPSQueryService:
         """Route the query to any account with quota; raise if all exhausted."""
         key = (type_name, region, az, n)
         now = self.market.now
+        if region in self.region_limits:
+            log = self._region_log[region]
+            seen = log.distinct_in_window(now)
+            if key not in seen and len(seen) >= self.region_limits[region]:
+                raise QueryLimitExceeded(
+                    f"region {region} exhausted its "
+                    f"{self.region_limits[region]}-scenario/24h quota")
+            if key not in seen:
+                log.scenarios.append((now, key))
         for acct in self.accounts:
             seen = acct.distinct_in_window(now)
             if key in seen or len(seen) < self.scenario_limit:

@@ -129,6 +129,24 @@ class EngineConfig:
         from ..serve.server import BatchServer
         return BatchServer(config=self, **kw)
 
+    def build_ingestor(self, collector, *, window: int, **kw):
+        """A :class:`~repro.stream.LiveIngestor` on this config.
+
+        The ingestor derives its archive cache and storage tier
+        (``archive_precision`` / ``archive_headroom``) from this config;
+        extra keyword arguments (``name``, ``shards``, ``devices``,
+        ``shard_bounds``, or an explicit shared ``cache``, ...) pass
+        through.  The multicloud scenario engine builds its region-sharded
+        ingestor this way, so collection and serving share one set of
+        knobs.
+        """
+        from ..stream.ingest import LiveIngestor
+        if "cache" in kw:
+            return LiveIngestor(collector, window=window,
+                                precision=self.archive_precision,
+                                headroom=self.archive_headroom, **kw)
+        return LiveIngestor(collector, window=window, config=self, **kw)
+
 
 def resolve_engine_config(config: EngineConfig | None,
                           *, stacklevel: int = 3,

@@ -421,14 +421,26 @@ class RecommendationEngine:
         recommendation (no Algorithm 1, no per-request masking).
 
         ``archive`` is any stats-backed operand (``DeviceArchive``, rolling
-        archive, version-pinned snapshot).  K-sharded archives are not
-        supported here — re-score through :meth:`recommend_batch`, which
-        routes them, or score one shard at a time.
+        archive, version-pinned snapshot).  K-sharded archives route
+        through the per-shard pipeline (``repro.shard``): scoring a shard
+        in isolation would normalize Eq. 3 against *its own* extrema, so
+        the sharded path's exact cross-shard MinMax merge is load-bearing
+        here, not an optimisation — the returned rows match the equivalent
+        single-device archive's.
         """
         if getattr(archive, "is_sharded", False):
-            raise NotImplementedError(
-                "score_archive needs a single-device stats-backed archive; "
-                "sharded operands re-score through recommend_batch")
+            from .. import shard as shard_lib
+            mask = np.ones((1, len(archive.host)), bool)
+            impl = pool_lib.resolve_pool_impl(self.pool_impl,
+                                              len(archive.host))
+            comb, avail, cost, *_ = shard_lib.sharded_batch_arrays(
+                archive, mask, np.array([use_cpus]),
+                np.array([weight], np.float32),
+                np.array([lam], np.float32),
+                np.array([amount], np.float32), mask,
+                np.zeros(1, np.int32), pool_impl=impl)
+            return (np.asarray(comb[0]), np.asarray(avail[0]),
+                    np.asarray(cost[0]))
         stats = archive.score_stats()
         mask = np.ones((1, len(archive.host)), bool)
         comb, avail, cost = _batched_scores(

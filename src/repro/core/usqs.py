@@ -86,6 +86,71 @@ class T3Estimator:
         return int(hits.max()) if hits.size else 0
 
 
+@dataclass
+class BudgetedProbeScheduler:
+    """Allocates a global per-cycle probe budget across (vendor, region) targets.
+
+    The single-market collector probes every target every cycle — fine for one
+    region, quota suicide for 17.  This scheduler generalizes USQS's "spread
+    queries over time" idea across *targets*: each cycle it plans at most
+    ``budget_per_cycle`` probes (globally, across every vendor and region),
+    subject to optional per-region caps, choosing targets by **staleness** —
+    never-probed targets first, then longest-since-probed — with a rotating
+    index tiebreak so equal-staleness targets share the budget fairly instead
+    of starving the tail.  Adding regions therefore degrades *staleness*
+    gracefully (bounded by ``ceil(K / budget)`` cycles) instead of blowing the
+    query budget.
+
+    ``region_keys[k]`` is the rate-limit key of target ``k`` — use
+    ``"vendor/region"`` strings so per-region caps compose across vendors.
+    State is a monotone accumulator (like :class:`T3Estimator`): a retried
+    cycle after a mid-collection raise just re-plans from current staleness.
+    """
+
+    region_keys: list[str]
+    budget_per_cycle: int
+    region_limits: dict[str, int] | None = None
+
+    def __post_init__(self):
+        self.region_keys = list(self.region_keys)
+        if self.budget_per_cycle < 1:
+            raise ValueError("budget_per_cycle must be >= 1")
+        self.region_limits = dict(self.region_limits or {})
+        self._last = np.full(len(self.region_keys), -1, np.int64)
+        #: per-plan probe counts — the benchmark's budget-held evidence
+        self.queries_issued: list[int] = []
+
+    @property
+    def n_targets(self) -> int:
+        return len(self.region_keys)
+
+    def staleness(self, cycle: int) -> np.ndarray:
+        """Cycles since each target was last planned (cycle+1 if never)."""
+        return np.where(self._last < 0, cycle + 1, cycle - self._last)
+
+    def plan(self, cycle: int) -> list[int]:
+        """Target indices to probe this cycle (sorted, <= budget_per_cycle)."""
+        k = np.arange(self.n_targets)
+        # primary: staleness desc; tiebreak: index rotated by cycle so ties
+        # rotate through the target list rather than always favouring low k
+        order = np.lexsort(((k - cycle) % max(self.n_targets, 1),
+                            -self.staleness(cycle)))
+        chosen: list[int] = []
+        used: dict[str, int] = {}
+        for i in order:
+            if len(chosen) >= self.budget_per_cycle:
+                break
+            r = self.region_keys[i]
+            lim = self.region_limits.get(r)
+            if lim is not None and used.get(r, 0) >= lim:
+                continue
+            chosen.append(int(i))
+            used[r] = used.get(r, 0) + 1
+        self._last[chosen] = cycle
+        self.queries_issued.append(len(chosen))
+        return sorted(chosen)
+
+
 def run_usqs(query: QueryFn, sampler: USQSSampler, cycles: int,
              estimator: T3Estimator | None = None) -> tuple[np.ndarray, np.ndarray, int]:
     """Drive `cycles` USQS probes against `query`.

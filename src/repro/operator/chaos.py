@@ -123,26 +123,37 @@ class ChaosReplay:
                  cycles: int = 30, period_min: float = 10.0,
                  requests=None, schedule: ChaosSchedule | None = None,
                  operator_config: OperatorConfig | None = None,
-                 engine_config: EngineConfig | None = None):
+                 engine_config: EngineConfig | None = None,
+                 market=None, collector=None, shard_bounds=None):
         self.schedule = schedule or ChaosSchedule()
         self.cycles = cycles
         self.period_min = period_min
-        self.market = SpotMarket(Catalog(seed=seed, n_regions=n_regions),
-                                 seed=seed, profile=profile)
-        svc = SPSQueryService(self.market, n_accounts=3000)
-        step = max(len(self.market.pool_keys) // n_targets, 1)
-        targets = [(t.name, r, az) for (t, r, az)
-                   in self.market.pool_keys[::step]][:n_targets]
-        self.collector = DataCollector(
-            svc, targets, CollectorConfig(period_min=period_min,
-                                          ring_capacity=max(window * 2, 16)))
+        if market is not None or collector is not None:
+            # injected world (e.g. a multicloud MarketFederation + its
+            # collector) — both halves must come from the same world
+            if market is None or collector is None:
+                raise TypeError("pass market= and collector= together")
+            self.market = market
+            self.collector = collector
+        else:
+            self.market = SpotMarket(Catalog(seed=seed, n_regions=n_regions),
+                                     seed=seed, profile=profile)
+            svc = SPSQueryService(self.market, n_accounts=3000)
+            step = max(len(self.market.pool_keys) // n_targets, 1)
+            targets = [(t.name, r, az) for (t, r, az)
+                       in self.market.pool_keys[::step]][:n_targets]
+            self.collector = DataCollector(
+                svc, targets,
+                CollectorConfig(period_min=period_min,
+                                ring_capacity=max(window * 2, 16)))
         for _ in range(warmup_cycles):     # seed window before the loop starts
             self.collector.collect_once()
             self.market.advance(self.market.now + period_min)
         cfg = engine_config or EngineConfig()
         self.server = cfg.build_server(bucket_sizes=(1, 2, 4, 8))
         self.ingestor = LiveIngestor(self.collector, window=window,
-                                     cache=self.server.cache)
+                                     cache=self.server.cache,
+                                     shard_bounds=shard_bounds)
         self.ingestor.prime()
         self._cycle = 0
         self.operator = Operator(

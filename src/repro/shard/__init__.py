@@ -9,13 +9,14 @@ single-device tiled path; see :mod:`repro.shard.compute` for the argument
 and :mod:`repro.shard.archive` for the storage layer.
 """
 from .archive import (ShardedArchive, ShardedRollingArchive, ShardedSnapshot,
-                      shard_bounds)
+                      check_bounds, shard_bounds)
 from .compute import sharded_batch_arrays
 
 __all__ = [
     "ShardedArchive",
     "ShardedRollingArchive",
     "ShardedSnapshot",
+    "check_bounds",
     "shard_bounds",
     "sharded_batch_arrays",
 ]

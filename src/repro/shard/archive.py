@@ -74,12 +74,44 @@ def shard_bounds(k: int, n_shards: int) -> tuple[tuple[int, int], ...]:
     return tuple(bounds)
 
 
-def _plan(k: int, n_shards: int | None, devices):
+def check_bounds(bounds, k: int) -> tuple[tuple[int, int], ...]:
+    """Validate explicit shard bounds: a contiguous partition of ``[0, k)``.
+
+    Region-sharded serving passes region extents here — the merge math only
+    needs *contiguous, non-empty, exhaustive* slices, not balanced ones.
+    """
+    bounds = tuple((int(a), int(b)) for a, b in bounds)
+    if not bounds:
+        raise ValueError("bounds must be non-empty")
+    start = 0
+    for i, (a, b) in enumerate(bounds):
+        if a != start:
+            raise ValueError(
+                f"bounds[{i}] starts at {a}, expected {start} (shards must "
+                f"be a contiguous partition of [0, {k}))")
+        if b <= a:
+            raise ValueError(f"bounds[{i}] = [{a}, {b}) is empty")
+        start = b
+    if start != k:
+        raise ValueError(
+            f"bounds cover [0, {start}) but the candidate axis has {k} rows")
+    return bounds
+
+
+def _plan(k: int, n_shards: int | None, devices, bounds=None):
     """Resolve ``(bounds, device-per-shard)`` for a K-candidate axis."""
     devices = tuple(jax.devices()) if devices is None else tuple(devices)
-    n = len(devices) if n_shards is None else int(n_shards)
-    n = min(n, k) if n_shards is None else n
-    bounds = shard_bounds(k, n)
+    if bounds is not None:
+        bounds = check_bounds(bounds, k)
+        if n_shards is not None and int(n_shards) != len(bounds):
+            raise ValueError(
+                f"n_shards={n_shards} conflicts with {len(bounds)} explicit "
+                f"bounds")
+        n = len(bounds)
+    else:
+        n = len(devices) if n_shards is None else int(n_shards)
+        n = min(n, k) if n_shards is None else n
+        bounds = shard_bounds(k, n)
     return bounds, tuple(devices[i % len(devices)] for i in range(n))
 
 
@@ -152,7 +184,7 @@ class ShardedArchive(_ShardedSurface):
     def stage(cls, cands: CandidateSet, *, n_shards: int | None = None,
               devices=None, key: str | None = None,
               precision: str = "float32",
-              headroom: float = 1.0) -> "ShardedArchive":
+              headroom: float = 1.0, bounds=None) -> "ShardedArchive":
         """Split ``cands`` into shards and stage one slice per device.
 
         ``devices`` defaults to :func:`jax.devices` and ``n_shards`` to its
@@ -167,8 +199,13 @@ class ShardedArchive(_ShardedSurface):
         quantised archive stores — and decodes to — exactly the rows of the
         equivalent single-device one, and the tier suffix lands on the
         archive key as well as each shard's.
+
+        ``bounds`` overrides the balanced split with an explicit contiguous
+        partition (see :func:`check_bounds`) — region-sharded serving pins
+        one shard per region this way, so shard ``i`` holds exactly region
+        ``i``'s candidates.
         """
-        bounds, devs = _plan(len(cands), n_shards, devices)
+        bounds, devs = _plan(len(cands), n_shards, devices, bounds)
         key = key if key is not None else cands.fingerprint()
         shards = tuple(
             DeviceArchive.stage(cands.take(np.arange(a, b)),
@@ -226,8 +263,8 @@ class ShardedRollingArchive(_ShardedSurface):
     def __init__(self, cands: CandidateSet, *, capacity: int | None = None,
                  name: str | None = None, n_shards: int | None = None,
                  devices=None, precision: str = "float32",
-                 headroom: float = 1.0):
-        bounds, devs = _plan(len(cands), n_shards, devices)
+                 headroom: float = 1.0, bounds=None):
+        bounds, devs = _plan(len(cands), n_shards, devices, bounds)
         self.host = cands
         self.name = name if name is not None else cands.fingerprint()
         self.bounds = bounds

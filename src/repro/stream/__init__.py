@@ -17,5 +17,5 @@ re-transfer, no statistics recompute (see
 ``benchmarks/ingest_throughput.py``).
 """
 from .admission import AdmissionQueue, AdmissionStats, Ticket  # noqa: F401
-from .ingest import LiveIngestor  # noqa: F401
+from .ingest import IngestPump, LiveIngestor  # noqa: F401
 from .rolling import ArchiveSnapshot, RollingDeviceArchive  # noqa: F401

@@ -11,6 +11,8 @@ batch routed through the cache can only ever hit the window it asked for.
 """
 from __future__ import annotations
 
+import threading
+
 from ..cloudsim.collector import DataCollector
 from ..core.config import EngineConfig
 from ..parallel import compression
@@ -59,6 +61,11 @@ class LiveIngestor:
     headroom : float, optional
         int8 clip slack multiplier (``compression.candidate_scales``);
         defaults to ``config.archive_headroom`` or 1.0.
+    shard_bounds : sequence of (start, end), optional
+        Explicit contiguous shard partition of the candidate axis
+        (``repro.shard.check_bounds``), overriding the balanced split.
+        Region-sharded serving pins one shard per region this way.  Implies
+        sharded staging even without ``shards`` / ``devices``.
     """
 
     def __init__(self, collector: DataCollector, *, window: int,
@@ -66,11 +73,14 @@ class LiveIngestor:
                  shards: int | None = None, devices=None,
                  config: EngineConfig | None = None,
                  precision: str | None = None,
-                 headroom: float | None = None):
+                 headroom: float | None = None,
+                 shard_bounds=None):
         if window < 1:
             raise ValueError("window must be >= 1")
         if shards is not None and shards < 1:
             raise ValueError("shards must be >= 1")
+        if shard_bounds is not None:
+            shard_bounds = tuple((int(a), int(b)) for a, b in shard_bounds)
         if config is not None:
             if cache is not None:
                 raise TypeError("pass either cache= or config=, not both")
@@ -89,6 +99,7 @@ class LiveIngestor:
         self._name = name
         self._shards = shards
         self._devices = devices
+        self._shard_bounds = shard_bounds
         self.archive = None   # RollingDeviceArchive | ShardedRollingArchive
         self._ingested = 0                    # collector ticks absorbed
 
@@ -103,12 +114,14 @@ class LiveIngestor:
             raise ValueError("collector has no completed ticks to stage")
         old_key = self.archive.key if self.archive is not None else None
         cands = self.collector.to_candidate_set(window=self.window)
-        if self._shards is not None or self._devices is not None:
+        if (self._shards is not None or self._devices is not None
+                or self._shard_bounds is not None):
             from ..shard import ShardedRollingArchive
             self.archive = ShardedRollingArchive(
                 cands, capacity=self.window, name=self._name,
                 n_shards=self._shards, devices=self._devices,
-                precision=self.precision, headroom=self.headroom)
+                precision=self.precision, headroom=self.headroom,
+                bounds=self._shard_bounds)
         else:
             self.archive = RollingDeviceArchive(
                 cands, capacity=self.window, name=self._name,
@@ -168,3 +181,73 @@ class LiveIngestor:
         """
         if self.archive is not None:
             self.archive.stale = True
+
+
+class IngestPump:
+    """Daemon thread driving collect -> ``LiveIngestor.poll`` on a cadence.
+
+    The collector-push integration: instead of every caller polling the
+    ingestor before serving, one pump per region world runs the collection
+    cadence — call the ``collect`` hook (one collector tick + market
+    advance), then :meth:`LiveIngestor.poll` so the versioned cache key
+    advances — in a daemon thread with clean :meth:`start` / :meth:`stop`.
+
+    ``period`` is the *wall-clock* cadence in seconds (simulated worlds run
+    much faster than the simulated ``period_min``); ``0`` pumps as fast as
+    the loop allows (tests).  Exceptions from the hook or the poll are
+    swallowed and counted (``errors``) — a flaky collector tick must not
+    kill the pump, exactly like the operator's bounded-retry stance — and
+    the first stored exception is kept in ``last_error`` for diagnosis.
+    """
+
+    def __init__(self, ingestor: LiveIngestor, collect, *,
+                 period: float = 0.0):
+        if period < 0:
+            raise ValueError("period must be >= 0")
+        self.ingestor = ingestor
+        self.collect = collect
+        self.period = period
+        self.errors = 0
+        self.last_error: BaseException | None = None
+        self.ticks_pumped = 0
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    @property
+    def running(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.collect()
+                self.ticks_pumped += self.ingestor.poll()
+            except Exception as e:  # flaky tick: count, keep pumping
+                self.errors += 1
+                if self.last_error is None:
+                    self.last_error = e
+            if self._stop.wait(self.period):
+                return
+
+    def start(self) -> "IngestPump":
+        if self.running:
+            raise RuntimeError("pump already running")
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Signal the loop and join the thread (no-op if never started)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if self._thread.is_alive():
+                raise RuntimeError("ingest pump failed to stop in time")
+            self._thread = None
+
+    def __enter__(self) -> "IngestPump":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()

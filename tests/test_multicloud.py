@@ -1,0 +1,477 @@
+"""Multi-vendor, multi-region scenario engine (``repro.multicloud``).
+
+The load-bearing contracts:
+
+- vendor-salted seeding: one (vendor, region, seed) triple is exactly
+  reproducible, while two regions with otherwise identical configs diverge;
+- signal adapters are monotone-consistent normalizers onto the shared T3
+  integer grid, tolerate Azure-style missing responses, and always feed the
+  rolling archive finite statistics;
+- the budget-aware probe scheduler never exceeds its global per-cycle
+  budget or any per-region cap, and its staleness stays within the
+  ceil(K / budget) bound;
+- region-sharded serving is **bit-identical** — pools and score rows — to a
+  single-device run over the equivalent merged catalog, snapshot and
+  rolling, across 2 vendors x 3 regions each.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
+                            QueryLimitExceeded, SpotMarket, SPSQueryService)
+from repro.core import RecommendationEngine, ResourceRequest
+from repro.core.usqs import BudgetedProbeScheduler
+from repro.multicloud import (SETUPS, MarketFederation, MergedCatalog,
+                              ScenarioConfig, ScenarioEngine, VENDORS,
+                              adapter_for, build_region, compare_setup,
+                              get_vendor)
+from repro.multicloud.adapters import (AwsSpsAdapter, AzureEvictionAdapter,
+                                       GcpPreemptionAdapter)
+from repro.operator import ChaosReplay, ChaosSchedule
+from repro.serve import DeviceArchive
+from repro.shard import ShardedArchive, check_bounds
+
+WINDOW = 6
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return RecommendationEngine()
+
+
+def _scenario(**overrides):
+    base = dict(vendors=("aws", "gcp"), regions_per_vendor=2,
+                types_per_region=3, azs_per_region=1, period_min=10.0)
+    base.update(overrides)
+    return ScenarioEngine(ScenarioConfig(**base))
+
+
+def _requests():
+    return [ResourceRequest(cpus=24.0, weight=0.3),
+            ResourceRequest(cpus=96.0, weight=0.7, lam=0.2),
+            ResourceRequest(memory_gb=64.0, weight=0.5)]
+
+
+def _assert_bitwise_equal(a, b, ctx=""):
+    assert list(a.names) == list(b.names), ctx
+    assert list(a.regions) == list(b.regions), ctx
+    assert list(a.azs) == list(b.azs), ctx
+    np.testing.assert_array_equal(a.counts, b.counts, err_msg=ctx)
+    np.testing.assert_array_equal(a.combined, b.combined, err_msg=ctx)
+    np.testing.assert_array_equal(a.availability, b.availability, err_msg=ctx)
+    np.testing.assert_array_equal(a.cost, b.cost, err_msg=ctx)
+    assert a.hourly_cost == b.hourly_cost, ctx
+
+
+# ---------------------------------------------------------------------------
+# vendor profiles + vendor-salted seeding
+# ---------------------------------------------------------------------------
+
+def test_vendor_registry():
+    assert set(VENDORS) == {"aws", "azure", "gcp"}
+    for name, vp in VENDORS.items():
+        assert vp.name == name
+        assert vp.region_names(1)            # every vendor has regions
+        assert vp.signal in ("sps", "eviction", "preemption")
+        adapter_for(vp.signal)               # every signal has an adapter
+    assert get_vendor("azure").market_profile == "azure"
+    with pytest.raises(KeyError):
+        get_vendor("oracle")
+
+
+def test_region_names_globally_unique():
+    seen = {}
+    for vp in VENDORS.values():
+        for r in vp.region_names(None):
+            assert r not in seen, f"{r} in both {seen.get(r)} and {vp.name}"
+            seen[r] = vp.name
+
+
+def test_build_region_deterministic():
+    """Same (vendor, region, seed) -> bit-identical market processes."""
+    _, m1 = build_region("gcp", "us-central1", seed=3)
+    _, m2 = build_region("gcp", "us-central1", seed=3)
+    np.testing.assert_array_equal(m1._base, m2._base)
+    idx = np.arange(len(m1.pool_keys))
+    for t in (0.0, 123.0, 999.0):
+        np.testing.assert_array_equal(m1.free(t, idx), m2.free(t, idx))
+
+
+def test_regions_with_identical_configs_diverge():
+    """Two regions differing only by name must not replay one trace."""
+    c1, m1 = build_region("gcp", "us-central1", seed=0)
+    c2, m2 = build_region("gcp", "us-east1", seed=0)
+    # identical shape: same catalog families, same AZ count
+    assert [t.name for t in c1.types] == [t.name for t in c2.types]
+    k = min(len(m1.pool_keys), len(m2.pool_keys))
+    idx = np.arange(k)
+    assert not np.array_equal(m1.free(100.0, idx), m2.free(100.0, idx))
+
+
+def test_vendor_salt_diverges_from_unsalted():
+    """A vendor-salted world must not shadow the historical unsalted one."""
+    cat = Catalog(seed=0, n_regions=1)
+    plain = SpotMarket(cat, seed=0)
+    salted = SpotMarket(Catalog(seed=0, n_regions=1, vendor="aws"),
+                        seed=0, vendor="aws")
+    idx = np.arange(min(len(plain.pool_keys), len(salted.pool_keys)))
+    assert not np.array_equal(plain.free(50.0, idx), salted.free(50.0, idx))
+
+
+# ---------------------------------------------------------------------------
+# signal adapters
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("adapter", [AwsSpsAdapter(t_max=50),
+                                     AzureEvictionAdapter(t_max=50),
+                                     GcpPreemptionAdapter(t_max=50)])
+def test_adapter_monotone_consistent(adapter):
+    """normalize(raw_from_free(f)) is non-decreasing in f, on [0, t_max]."""
+    fs = np.linspace(0.0, 50.0, 201)           # free capacity in nodes
+    vals = [adapter.normalize(adapter.raw_from_free(f)) for f in fs]
+    assert all(b >= a for a, b in zip(vals, vals[1:]))
+    assert min(vals) >= 0 and max(vals) <= 50
+    assert all(float(v).is_integer() for v in vals)   # integer grid
+    assert vals[0] == 0 and vals[-1] == 50            # full range used
+
+
+def test_adapter_for_unknown_signal():
+    with pytest.raises(KeyError):
+        adapter_for("tea-leaves")
+
+
+def test_azure_adapter_missing_response():
+    """A dark SPS response surfaces as None, never as a fake value."""
+    class DarkMarket:
+        def sps(self, *a, **kw):
+            return None
+    adapter = AzureEvictionAdapter(t_max=50)
+    assert adapter.probe(DarkMarket(), ("x", "eastus", "a")) is None
+    assert adapter.sample(DarkMarket(), ("x", "eastus", "a")) is None
+
+
+def test_azure_gaps_carry_forward_with_finite_archive():
+    """Azure missing responses leave gaps the collector rides through."""
+    eng = _scenario(vendors=("azure",), regions_per_vendor=2,
+                    types_per_region=4, azs_per_region=2, seed=1)
+    eng.warmup(30)
+    coll = eng.collector
+    assert coll.missing_responses > 0          # the 5% dark draws happened
+    assert coll.ticks == 30
+    for tgt, series in coll.t3_archive.items():
+        assert len(series) == 30               # never ragged
+    for i in range(coll.ticks):
+        col = coll.column(i)
+        assert np.all(np.isfinite(col))
+        assert np.all((col >= 0) & (col <= eng.scenario.t_max))
+
+
+def test_rolling_archive_gets_finite_stats_every_tick(engine):
+    """Adapter output feeds the rolling archive finite stats at every tick."""
+    eng = _scenario(vendors=("azure", "gcp"), regions_per_vendor=1, seed=2)
+    eng.warmup(WINDOW)
+    ing = eng.build_ingestor(window=WINDOW, sharded=False)
+    ing.prime()
+    for _ in range(5):
+        eng.warmup(1)
+        ing.poll()
+        stats = ing.archive.score_stats()
+        assert np.all(np.isfinite(np.asarray(stats.area)))
+        assert np.all(np.isfinite(np.asarray(stats.slope)))
+        rec = engine.recommend_batch(ing.archive.host,
+                                     [ResourceRequest(cpus=16.0)],
+                                     archive=ing.archive)[0]
+        assert rec.num_types >= 1
+
+
+# ---------------------------------------------------------------------------
+# budget-aware probe scheduling
+# ---------------------------------------------------------------------------
+
+def test_scheduler_holds_global_budget():
+    keys = [f"r{i // 4}" for i in range(12)]
+    sched = BudgetedProbeScheduler(region_keys=keys, budget_per_cycle=5)
+    seen = set()
+    for c in range(6):
+        plan = sched.plan(c)
+        assert len(plan) == 5                  # budget saturated, never over
+        assert len(set(plan)) == len(plan)
+        seen.update(plan)
+    assert seen == set(range(12))              # rotation covers everything
+    bound = math.ceil(12 / 5)
+    assert int(sched.staleness(6).max()) <= bound
+
+
+def test_scheduler_rotates_under_uniform_staleness():
+    sched = BudgetedProbeScheduler(region_keys=["r"] * 9, budget_per_cycle=3)
+    assert sched.plan(0) == [0, 1, 2]
+    assert sched.plan(1) == [3, 4, 5]          # stalest-first, rotating ties
+    assert sched.plan(2) == [6, 7, 8]
+
+
+def test_scheduler_respects_region_limits():
+    keys = ["a"] * 4 + ["b"] * 4
+    sched = BudgetedProbeScheduler(region_keys=keys, budget_per_cycle=4,
+                                   region_limits={"a": 1})
+    for c in range(8):
+        plan = sched.plan(c)
+        assert len(plan) <= 4
+        assert sum(1 for k in plan if keys[k] == "a") <= 1
+
+
+def test_scheduler_validates_budget():
+    with pytest.raises(ValueError):
+        BudgetedProbeScheduler(region_keys=["r"], budget_per_cycle=0)
+
+
+def test_data_collector_scheduler_integration():
+    """The single-market collector also rides the scheduler (satellite)."""
+    mkt = SpotMarket(Catalog(seed=5, n_regions=2), seed=5)
+    svc = SPSQueryService(mkt, n_accounts=3000)
+    targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[:8]]
+    sched = BudgetedProbeScheduler(region_keys=[rg for _, rg, _ in targets],
+                                   budget_per_cycle=3)
+    col = DataCollector(svc, targets,
+                        CollectorConfig(ring_capacity=16, scheduler=sched))
+    col.run(6)
+    assert col.ticks == 6
+    assert all(q == 3 for q in sched.queries_issued)
+    for series in col.t3_archive.values():
+        assert len(series) == 6                # carry-forward keeps it square
+
+
+# ---------------------------------------------------------------------------
+# int8 host ring + SPS region quotas (satellites)
+# ---------------------------------------------------------------------------
+
+def test_ring_dtype_validation():
+    with pytest.raises(ValueError):
+        CollectorConfig(ring_dtype="int4")
+    with pytest.raises(ValueError):
+        CollectorConfig(ring_dtype="int8", t_max=200)
+    CollectorConfig(ring_dtype="int8", t_max=127)   # boundary is fine
+
+
+def test_int8_ring_exact_roundtrip():
+    mkt = SpotMarket(Catalog(seed=7, n_regions=1), seed=7)
+    svc = SPSQueryService(mkt, n_accounts=3000)
+    targets = [(t.name, r, az) for (t, r, az) in mkt.pool_keys[:10]]
+    i8 = DataCollector(svc, targets,
+                       CollectorConfig(ring_capacity=16, ring_dtype="int8"))
+    f64 = DataCollector(SPSQueryService(
+        SpotMarket(Catalog(seed=7, n_regions=1), seed=7), n_accounts=3000),
+        targets, CollectorConfig(ring_capacity=16))
+    for _ in range(8):
+        i8.collect_once(); f64.collect_once()
+        i8.market.advance(i8.market.now + 10.0)
+        f64.market.advance(f64.market.now + 10.0)
+    for i in range(8):
+        a, b = i8.column(i), f64.column(i)
+        assert a.dtype == np.float64           # consumers never see int8
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(i8.to_candidate_set(window=8).t3,
+                                  f64.to_candidate_set(window=8).t3)
+
+
+def test_sps_region_quota():
+    mkt = SpotMarket(Catalog(seed=0, n_regions=1), seed=0)
+    region = mkt.pool_keys[0][1]
+    svc = SPSQueryService(mkt, n_accounts=3000,
+                          region_limits={region: 2})
+    (t0, r0, a0), (t1, _, a1) = mkt.pool_keys[0][:3], mkt.pool_keys[1][:3]
+    svc.query(t0.name, r0, a0, 1)
+    svc.query(t0.name, r0, a0, 1)              # same scenario: no new spend
+    svc.query(t1.name, r0, a1, 1)              # second distinct scenario
+    with pytest.raises(QueryLimitExceeded):
+        svc.query(t1.name, r0, a1, 5)          # third distinct scenario
+
+
+# ---------------------------------------------------------------------------
+# scenario collector
+# ---------------------------------------------------------------------------
+
+def test_targets_region_contiguous():
+    eng = _scenario()
+    bounds = eng.region_bounds
+    assert bounds[0][0] == 0 and bounds[-1][1] == eng.n_targets
+    assert all(a[1] == b[0] for a, b in zip(bounds, bounds[1:]))
+    for (lo, hi), world in zip(bounds, eng.worlds):
+        regions = {rg for _, rg, _ in eng.collector.targets[lo:hi]}
+        assert regions == {world.region}
+
+
+def test_collector_atomic_on_fault():
+    """A raising fault hook leaves the archive exactly as it was."""
+    boom = {"at": 3}
+    def hook(tick):
+        if tick == boom["at"]:
+            raise RuntimeError("injected")
+    eng = _scenario(vendors=("aws",), regions_per_vendor=1, fault_hook=hook)
+    coll = eng.collector
+    for _ in range(3):
+        coll.collect_once()
+    before = (coll.ticks, list(coll.times),
+              {t: list(v) for t, v in coll.t3_archive.items()})
+    with pytest.raises(RuntimeError):
+        coll.collect_once()
+    assert (coll.ticks, list(coll.times),
+            {t: list(v) for t, v in coll.t3_archive.items()}) == before
+    boom["at"] = -1
+    coll.collect_once()                        # retry lands tick 4 cleanly
+    assert coll.ticks == 4
+
+
+def test_scenario_budget_scaling_holds():
+    eng = _scenario(vendors=("aws",), regions_per_vendor=3,
+                    types_per_region=4, azs_per_region=2,
+                    budget_per_cycle=7)
+    eng.warmup(10)
+    assert eng.n_targets == 24
+    assert all(q <= 7 for q in eng.scheduler.queries_issued)
+    assert int(eng.scheduler.staleness(10).max()) <= math.ceil(24 / 7)
+
+
+# ---------------------------------------------------------------------------
+# market federation
+# ---------------------------------------------------------------------------
+
+def test_merged_catalog_rejects_duplicate_regions():
+    eng = _scenario(vendors=("aws",), regions_per_vendor=1)
+    with pytest.raises(ValueError, match="more than one world"):
+        MergedCatalog(eng.worlds + eng.worlds)
+
+
+def test_federation_routes_and_remaps_ids():
+    eng = _scenario()
+    fed = eng.federation
+    w_aws, w_gcp = eng.worlds[0], eng.worlds[2]
+    assert w_aws.vendor.name == "aws" and w_gcp.vendor.name == "gcp"
+    ta, tg = w_aws.targets[0], w_gcp.targets[0]
+    ok_a, ids_a = fed.request_spot(*ta, 2)
+    ok_g, ids_g = fed.request_spot(*tg, 1)
+    assert ok_a and ok_g
+    assert ids_g[0] == len(ids_a)              # one shared fed-id space
+    assert len(w_aws.market.records) == 2      # routed to the owning market
+    assert len(w_gcp.market.records) == 1
+    assert all(fed.node(i).alive for i in ids_a + ids_g)
+    fed.terminate([ids_a[1]])
+    assert not fed.node(ids_a[1]).alive
+    assert fed.node(ids_a[0]).alive            # sibling untouched
+    # advance moves every region market in lockstep
+    fed.advance(fed.now + 30.0)
+    assert all(w.market.now == fed.now for w in eng.worlds)
+    # reclaim routes by region and feeds the shared interruption log
+    cursor = len(fed.interruptions)
+    events = fed.reclaim(*tg, 1)
+    assert len(events) == 1
+    fresh, _ = fed.events_since(cursor)
+    assert fresh == events
+    assert not fed.node(ids_g[0]).alive
+
+
+def test_federation_catalog_prices_match_worlds():
+    eng = _scenario()
+    fed = eng.federation
+    for w in eng.worlds:
+        ty, rg, _az = w.targets[0]
+        assert fed.catalog.spot_price(ty, rg) == w.catalog.spot_price(ty, rg)
+        assert fed.catalog.utc_offset(rg) == w.catalog.utc_offset(rg)
+    with pytest.raises(KeyError):
+        fed.catalog.spot_price("anything", "atlantis-north-1")
+
+
+# ---------------------------------------------------------------------------
+# region-sharded serving == single merged-catalog run (the tentpole gate)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def parity_engine():
+    eng = ScenarioEngine(ScenarioConfig(
+        vendors=("aws", "gcp"), regions_per_vendor=3,
+        types_per_region=3, azs_per_region=1, period_min=10.0, seed=4))
+    eng.warmup(8)
+    return eng
+
+
+def test_region_sharded_snapshot_parity(engine, parity_engine):
+    eng = parity_engine
+    assert len(eng.region_bounds) == 6         # 2 vendors x 3 regions
+    cands = eng.collector.to_candidate_set(window=WINDOW)
+    reqs = _requests()
+    single = engine.recommend_batch(cands, reqs,
+                                    archive=DeviceArchive.stage(cands))
+    sharded = engine.recommend_batch(
+        cands, reqs,
+        archive=ShardedArchive.stage(cands, bounds=eng.region_bounds))
+    for i, (a, b) in enumerate(zip(sharded, single)):
+        _assert_bitwise_equal(a, b, ctx=f"snapshot request {i}")
+
+
+def test_region_sharded_rolling_parity(engine, parity_engine):
+    eng = parity_engine
+    reqs = _requests()
+    sharded_ing = eng.build_ingestor(window=WINDOW, sharded=True)
+    single_ing = eng.build_ingestor(window=WINDOW, sharded=False,
+                                    name="single-ref")
+    sharded_ing.prime(); single_ing.prime()
+    assert sharded_ing.archive.is_sharded
+    assert sharded_ing.archive.n_shards == 6
+    for tick in range(4):
+        eng.warmup(1)
+        assert sharded_ing.poll() == 1 and single_ing.poll() == 1
+        a_batch = engine.recommend_batch(sharded_ing.archive.host, reqs,
+                                         archive=sharded_ing.archive)
+        b_batch = engine.recommend_batch(single_ing.archive.host, reqs,
+                                         archive=single_ing.archive)
+        for i, (a, b) in enumerate(zip(a_batch, b_batch)):
+            _assert_bitwise_equal(a, b, ctx=f"tick {tick} request {i}")
+
+
+def test_check_bounds_validation():
+    assert check_bounds([(0, 2), (2, 5)], 5) == ((0, 2), (2, 5))
+    with pytest.raises(ValueError):
+        check_bounds([(1, 5)], 5)              # must start at 0
+    with pytest.raises(ValueError):
+        check_bounds([(0, 2), (3, 5)], 5)      # gap
+    with pytest.raises(ValueError):
+        check_bounds([(0, 3), (2, 5)], 5)      # overlap
+    with pytest.raises(ValueError):
+        check_bounds([(0, 2), (2, 2), (2, 5)], 5)   # empty shard
+    with pytest.raises(ValueError):
+        check_bounds([(0, 4)], 5)              # must end at k
+
+
+# ---------------------------------------------------------------------------
+# closed loop + the paper's §6.4 comparison
+# ---------------------------------------------------------------------------
+
+def test_multicloud_chaos_replay_end_to_end():
+    eng = _scenario(period_min=30.0)
+    replay = ChaosReplay(
+        market=eng.federation, collector=eng.collector,
+        window=WINDOW, warmup_cycles=WINDOW, cycles=8, period_min=30.0,
+        requests=[ResourceRequest(cpus=32.0, weight=0.5)],
+        schedule=ChaosSchedule(reclaims={3: 2}),
+        shard_bounds=eng.region_bounds)
+    report = replay.run("multicloud-smoke")
+    assert 0.0 <= report.delivered_availability <= 1.0
+    assert report.interruptions >= 2
+    assert report.stranded_tickets == 0
+    assert report.worker_alive_at_end
+    assert len(eng.federation.records) > 0
+
+
+def test_compare_setup_spotvista_beats_static_baselines():
+    res = compare_setup("multi_cloud", seed=0, period_min=30.0,
+                        types_per_region=3, window=6, warmup=8, cycles=10,
+                        amount=48.0)
+    assert set(res) == {"spotvista", "spotfleet", "spotfleet_lp", "spotverse"}
+    sv = res["spotvista"]
+    assert sv.interruptions > 0                # the drumbeat landed
+    for name in ("spotfleet", "spotfleet_lp", "spotverse"):
+        assert sv.availability >= res[name].availability
+    assert 0.0 < sv.savings_pct < 100.0
+    assert set(SETUPS) == {"single_region", "multi_az",
+                           "multi_region", "multi_cloud"}

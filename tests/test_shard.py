@@ -359,3 +359,58 @@ def test_shards_actually_placed_on_distinct_devices(cands):
     arch = ShardedArchive.stage(cands, n_shards=len(jax.devices()))
     placements = {next(iter(s.t3.devices())) for s in arch.shards}
     assert len(placements) == min(arch.n_shards, len(jax.devices()))
+
+
+# ---------------------------------------------------------------------------
+# explicit bounds: uneven region-shaped shards stay bit-identical
+# ---------------------------------------------------------------------------
+
+def test_explicit_bounds_pools_bit_identical(cands, engine):
+    """Caller-supplied uneven bounds (the multicloud region map) serve the
+    same pools and scores as the single-device run."""
+    bounds = ((0, 10), (10, 40), (40, 41), (41, 72))
+    reqs = heterogeneous_requests(cands)
+    arch = ShardedArchive.stage(cands, bounds=bounds)
+    assert arch.n_shards == len(bounds)
+    assert [len(s) for s in arch.shards] == [10, 30, 1, 31]
+    single = engine.recommend_batch(cands, reqs,
+                                    archive=DeviceArchive.stage(cands))
+    for a, b in zip(single, engine.recommend_batch(cands, reqs,
+                                                   archive=arch)):
+        _assert_bitwise(a, b)
+
+
+def test_explicit_bounds_rolling_matches_cold_restage(engine):
+    bounds = ((0, 7), (7, 36), (36, 72))
+    roll_cands = synth_candidates(seed=11, K=72, T=WINDOW)
+    arch = ShardedRollingArchive(roll_cands, bounds=bounds, name="regions")
+    assert arch.n_shards == 3
+    reqs = heterogeneous_requests(roll_cands)[:6]
+    rng = np.random.default_rng(17)
+    for _ in range(4):
+        arch.append(rng.integers(0, 50, 72).astype(np.float64))
+        live = engine.recommend_batch(arch.host, reqs, archive=arch)
+        cold_set = synth_candidates(seed=11, K=72, T=WINDOW)
+        cold_set.t3 = arch.materialize().astype(np.float64)
+        cold = engine.recommend_batch(
+            cold_set, reqs, archive=DeviceArchive.stage(cold_set))
+        for a, b in zip(live, cold):
+            # pools bit-identical; scores ulp-tight (streamed moments vs
+            # one-shot window reductions, same budget as the stream suite)
+            assert list(a.names) == list(b.names)
+            np.testing.assert_array_equal(a.counts, b.counts)
+            assert a.hourly_cost == b.hourly_cost
+            np.testing.assert_allclose(a.combined, b.combined,
+                                       rtol=1e-5, atol=1e-4)
+
+
+def test_explicit_bounds_validation(cands):
+    for bad in ([(1, 72)],            # must start at 0
+                [(0, 10), (11, 72)],  # gap
+                [(0, 12), (10, 72)],  # overlap
+                [(0, 0), (0, 72)],    # empty shard
+                [(0, 80)]):           # beyond k
+        with pytest.raises(ValueError):
+            ShardedArchive.stage(cands, bounds=bad)
+    with pytest.raises(ValueError, match="conflicts"):
+        ShardedArchive.stage(cands, n_shards=2, bounds=[(0, 72)])

@@ -6,6 +6,8 @@ The load-bearing contract: after any number of streamed ticks,
 to a cold re-stage of the materialized window — the O(K) incremental path
 may not drift the service's decisions, at any version.
 """
+import time
+
 import numpy as np
 import pytest
 
@@ -14,7 +16,8 @@ from repro.cloudsim import (Catalog, CollectorConfig, DataCollector,
 from repro.core import EngineConfig, RecommendationEngine, ResourceRequest
 from repro.core import scoring
 from repro.serve import ArchiveCache, BatchServer, DeviceArchive
-from repro.stream import (AdmissionQueue, ArchiveSnapshot, LiveIngestor,
+from repro.stream import (AdmissionQueue, ArchiveSnapshot, IngestPump,
+                          LiveIngestor,
                           RollingDeviceArchive)
 
 from test_serve_batch import synth_candidates
@@ -485,3 +488,89 @@ def test_admission_background_worker_smoke():
     finally:
         q.stop()
     assert not q.running
+
+
+# ---------------------------------------------------------------------------
+# IngestPump: collector-push, no caller polling
+# ---------------------------------------------------------------------------
+
+def _pump_world(cycles=WINDOW):
+    col = _collector(cycles=cycles)
+    cache = ArchiveCache(capacity=4)
+    ing = LiveIngestor(col, window=WINDOW, cache=cache, name="pumped")
+    ing.prime()
+
+    def collect():
+        col.collect_once()
+        col.market.advance(col.market.now + col.cfg.period_min)
+
+    return col, cache, ing, collect
+
+
+def test_ingest_pump_advances_versions_without_polling():
+    """Versioned cache keys advance on the collector cadence — the caller
+    never touches ``poll``."""
+    col, cache, ing, collect = _pump_world()
+    v0, key0 = ing.version, ing.archive.key
+    pump = IngestPump(ing, collect)
+    with pump:
+        deadline = time.monotonic() + 30.0
+        while ing.version < v0 + 5 and time.monotonic() < deadline:
+            time.sleep(0.01)
+    assert not pump.running                  # context exit stopped it
+    assert ing.version >= v0 + 5
+    assert pump.ticks_pumped == ing.version - v0
+    assert pump.errors == 0
+    assert ing.archive.key in cache and key0 not in cache
+    assert ing.lag == 0                      # pump left nothing pending
+    # the pumped archive serves exactly like a cold re-stage
+    engine = RecommendationEngine(EngineConfig(score_impl="tiled"))
+    reqs = _requests(col.to_candidate_set(window=WINDOW))
+    live = engine.recommend_batch(ing.archive.host, reqs,
+                                  archive=ing.archive)
+    cold_set = col.to_candidate_set(window=WINDOW)
+    cold = engine.recommend_batch(cold_set, reqs,
+                                  archive=DeviceArchive.stage(cold_set))
+    for a, b in zip(live, cold):
+        _assert_same_pools(a, b)
+
+
+def test_ingest_pump_clean_start_stop():
+    _, _, ing, collect = _pump_world()
+    pump = IngestPump(ing, collect, period=0.005)
+    assert not pump.running
+    pump.stop()                              # stop before start is a no-op
+    pump.start()
+    assert pump.running
+    with pytest.raises(RuntimeError, match="already running"):
+        pump.start()
+    pump.stop()
+    assert not pump.running
+    pump.start()                             # restartable after a stop
+    pump.stop()
+    assert not pump.running
+    with pytest.raises(ValueError):
+        IngestPump(ing, collect, period=-1.0)
+
+
+def test_ingest_pump_swallows_flaky_ticks():
+    """A raising collect hook is counted, kept, and never kills the pump."""
+    _, _, ing, collect = _pump_world()
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] % 2:
+            raise RuntimeError("flaky tick")
+        collect()
+
+    pump = IngestPump(ing, flaky)
+    with pump:
+        deadline = time.monotonic() + 30.0
+        while (pump.errors < 2 or pump.ticks_pumped < 2) \
+                and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert pump.running                  # still alive through raises
+    assert pump.errors >= 2
+    assert pump.ticks_pumped >= 2
+    assert isinstance(pump.last_error, RuntimeError)
