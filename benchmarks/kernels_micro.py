@@ -43,7 +43,7 @@ def run() -> list[str]:
     r = jax.random.normal(ks[3], (B, S, H, D), jnp.float32) * 0.5
     lw = -jnp.exp(jax.random.normal(ks[4], (B, S, H, D)) - 2)
     u = jax.random.normal(ks[5], (H, D)) * 0.3
-    s0 = jnp.zeros((B, H, D, D))
+    s0 = jnp.zeros((B, H, D, D), jnp.float32)
     wkv_seq = jax.jit(lambda *a: ref.rwkv6_scan_ref(*a))
     wkv_chk = jax.jit(lambda *a: wkv_chunked(*a, 32))
     t_seq = _time(wkv_seq, r, k.astype(jnp.float32), v.astype(jnp.float32), lw, u, s0)
@@ -55,7 +55,7 @@ def run() -> list[str]:
     R = 128
     la = -jnp.exp(jax.random.normal(ks[6], (B, S, R)) - 1)
     xi = jax.random.normal(ks[7], (B, S, R))
-    h0 = jnp.zeros((B, R))
+    h0 = jnp.zeros((B, R), jnp.float32)
     rg_seq = jax.jit(lambda *a: ref.rglru_scan_ref(*a))
     rg_chk = jax.jit(lambda *a: rglru_chunked(*a, 64))
     t_seq = _time(rg_seq, la, xi, h0)

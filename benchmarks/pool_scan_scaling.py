@@ -69,7 +69,7 @@ def _scan_instance(K: int, seed: int = 0):
     rng = np.random.default_rng(seed)
     s = jnp.asarray(rng.uniform(0.1, 100.0, K), jnp.float32)
     c = jnp.asarray(rng.choice([2, 4, 8, 16, 32, 48, 64, 96], K)
-                    .astype(np.float32))
+                    .astype(np.float32), jnp.float32)
     return s, c, jnp.float32(K * 4.0)
 
 

@@ -34,6 +34,7 @@ MODULES = [
     "multiregion_compare",
     "kernels_micro",
     "roofline",
+    "spotlint_gate",
 ]
 
 

@@ -79,17 +79,18 @@ def _bench(fn, **kw):
 def _instance(K: int, T: int, seed: int = 0):
     """Device-staged archive columns + a request batch (no filters)."""
     rng = np.random.default_rng(seed)
-    t3 = jnp.asarray(rng.random((K, T), dtype=np.float32) * 50.0)
+    t3 = jnp.asarray(rng.random((K, T), dtype=np.float32) * 50.0, jnp.float32)
     prices = jnp.asarray(rng.uniform(0.01, 5.0, K), jnp.float32)
     vcpus = jnp.asarray(rng.choice([2, 4, 8, 16, 32, 64, 96], K)
-                        .astype(np.float32))
+                        .astype(np.float32), jnp.float32)
     mems = jnp.asarray(rng.choice([4, 8, 16, 64, 128, 384], K)
-                       .astype(np.float32))
+                       .astype(np.float32), jnp.float32)
     masks = np.ones((B, K), bool)
-    use_cpus = jnp.asarray(rng.random(B) < 0.5)
+    use_cpus = jnp.asarray(rng.random(B) < 0.5, bool)
     weights = jnp.asarray(rng.uniform(0.2, 0.8, B), jnp.float32)
     lams = jnp.asarray(rng.uniform(0.05, 0.3, B), jnp.float32)
-    amounts = jnp.asarray(rng.integers(64, 4096, B).astype(np.float32))
+    amounts = jnp.asarray(rng.integers(64, 4096, B).astype(np.float32),
+                          jnp.float32)
     return t3, prices, vcpus, mems, masks, use_cpus, weights, lams, amounts
 
 
@@ -105,10 +106,10 @@ def _stage_args(inst, masks, impl: str, stats):
     t3, prices, vcpus, mems, _, use_cpus, weights, lams, amounts = inst
     if impl == "tiled":
         uniq, inv = engine_lib._dedup_masks(masks)
-        return (t3, prices, vcpus, mems, jnp.asarray(masks), use_cpus,
-                weights, lams, amounts, stats, jnp.asarray(uniq),
-                jnp.asarray(inv))
-    return (t3, prices, vcpus, mems, jnp.asarray(masks), use_cpus,
+        return (t3, prices, vcpus, mems, jnp.asarray(masks, bool), use_cpus,
+                weights, lams, amounts, stats, jnp.asarray(uniq, bool),
+                jnp.asarray(inv, jnp.int32))
+    return (t3, prices, vcpus, mems, jnp.asarray(masks, bool), use_cpus,
             weights, lams, amounts, None, None, None)
 
 
@@ -135,10 +136,10 @@ def _check_outputs(inst, masks, stats) -> bool:
     caps = jnp.where(use_cpus[:, None], vcpus[None, :], mems[None, :])
     pool = jax.vmap(lambda s, c, r, m: pool_lib.greedy_pool_masked(
         s, c, r, m, impl="tiled"))
-    pd = jax.device_get(pool(jnp.asarray(dense[0]), caps, amounts,
-                             jnp.asarray(masks)))
-    pt = jax.device_get(pool(jnp.asarray(tiled[0]), caps, amounts,
-                             jnp.asarray(masks)))
+    pd = jax.device_get(pool(jnp.asarray(dense[0], jnp.float32), caps, amounts,
+                             jnp.asarray(masks, bool)))
+    pt = jax.device_get(pool(jnp.asarray(tiled[0], jnp.float32), caps, amounts,
+                             jnp.asarray(masks, bool)))
     return all(np.array_equal(np.asarray(a), np.asarray(b))
                for a, b in zip(pd, pt))
 

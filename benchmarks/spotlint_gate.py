@@ -1,0 +1,28 @@
+"""spotlint as a benchmark-suite gate: the tree must scan clean.
+
+Mirrors the CI lint lane inside the ``benchmarks.run`` driver so a local
+full-suite run fails loudly when a finding slips in, and reports the scan
+cost (the linter walks every Python file in src/tests/benchmarks, so its
+wall time is worth tracking like any other tool on the hot path).
+"""
+from __future__ import annotations
+
+import time
+from pathlib import Path
+
+from repro.analysis import run_paths
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run():
+    paths = [ROOT / d for d in ("src", "tests", "benchmarks")]
+    t0 = time.perf_counter()
+    findings, n_files = run_paths(paths)
+    dt_us = (time.perf_counter() - t0) * 1e6
+    if findings:
+        raise AssertionError(
+            "spotlint gate: %d finding(s):\n%s" % (
+                len(findings), "\n".join(f.format() for f in findings)))
+    yield (f"spotlint/full_tree,{dt_us:.0f},"
+           f"files={n_files};findings=0")

@@ -45,7 +45,7 @@ def run() -> list[str]:
     rng = np.random.default_rng(0)
     for k in (200, 800, 3000):
         scores = rng.uniform(1, 100, k)
-        cpus = rng.choice([2, 4, 8, 16, 32, 48, 64, 96], k).astype(float)
+        cpus = rng.choice([2, 4, 8, 16, 32, 48, 64, 96], k).astype(np.float64)
         g = greedy_pool_vectorized(scores, cpus, 160.0)
         ilp = ilp_pool(scores, cpus, 160.0, gamma=100.0, time_limit=60.0)
         def vobj(res):

@@ -1,0 +1,20 @@
+"""spotlint: project-invariant static analysis + threaded-path race sanitizer.
+
+Static half (``python -m repro.analysis``): AST rules SPL001-SPL005
+mechanize the correctness invariants earned over the repo's growth — see
+:mod:`repro.analysis.framework` and the rule modules under
+:mod:`repro.analysis.rules`.
+
+Dynamic half (:mod:`repro.analysis.racecheck`): an instrumented
+:class:`~repro.analysis.racecheck.LockRegistry` that wraps the serving /
+operator locks, builds the lock-acquisition-order graph (a cycle is a
+potential deadlock), and reports guarded-field writes performed without
+the mapped lock held — run under the threaded tests via the ``racecheck``
+pytest fixture.
+
+Deliberately jax-free at import time: the linter must run on trees (and in
+environments) where jax itself is broken.
+"""
+from .framework import (Finding, Rule, check_file, check_source,  # noqa: F401
+                        resolve_rules, run_paths)
+from .cli import main  # noqa: F401

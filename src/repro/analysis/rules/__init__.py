@@ -1,0 +1,3 @@
+"""SPL rule modules — importing this package registers every rule."""
+from . import (spl001_donation, spl002_f32pin, spl003_locks,  # noqa: F401
+               spl004_version, spl005_tracer)

@@ -1,0 +1,213 @@
+"""Shared AST plumbing for the SPL rules.
+
+The rules all reason about the same handful of shapes — ``jax.jit``
+decorations (with ``donate_argnums`` / ``static_argnames``), attribute
+chains rooted at ``self``, and lexical statement order — so the helpers
+live here once.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+
+
+@dataclass
+class JitInfo:
+    """What a ``jax.jit`` decoration (or wrapping call) declared."""
+
+    is_jit: bool = False
+    donate: set[int] = field(default_factory=set)
+    static_names: set[str] = field(default_factory=set)
+    static_nums: set[int] = field(default_factory=set)
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    """``jax.jit`` or bare ``jit`` (imported name)."""
+    if isinstance(node, ast.Attribute) and node.attr == "jit":
+        return True
+    return isinstance(node, ast.Name) and node.id == "jit"
+
+
+def _int_elts(node: ast.expr | None) -> set[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, int)}
+    return set()    # non-literal (computed) spec: nothing to resolve
+
+
+def _str_elts(node: ast.expr | None) -> set[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return {node.value}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return {e.value for e in node.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)}
+    return set()
+
+
+def jit_info_from_call(call: ast.Call) -> JitInfo:
+    """Parse ``jax.jit(f, ...)`` / ``functools.partial(jax.jit, ...)``."""
+    info = JitInfo()
+    func = call.func
+    target = None
+    if _is_jax_jit(func):
+        target = call
+    elif (isinstance(func, ast.Attribute) and func.attr == "partial") or (
+            isinstance(func, ast.Name) and func.id == "partial"):
+        if call.args and _is_jax_jit(call.args[0]):
+            target = call
+    if target is None:
+        return info
+    info.is_jit = True
+    for kw in target.keywords:
+        if kw.arg == "donate_argnums":
+            info.donate = _int_elts(kw.value)
+        elif kw.arg == "static_argnums":
+            info.static_nums = _int_elts(kw.value)
+        elif kw.arg == "static_argnames":
+            info.static_names = _str_elts(kw.value)
+    return info
+
+
+def jit_info(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> JitInfo:
+    """The merged jit declaration across a function's decorators."""
+    merged = JitInfo()
+    for dec in fn.decorator_list:
+        if _is_jax_jit(dec):       # bare @jax.jit
+            merged.is_jit = True
+            continue
+        if isinstance(dec, ast.Call):
+            info = jit_info_from_call(dec)
+            if info.is_jit:
+                merged.is_jit = True
+                merged.donate |= info.donate
+                merged.static_names |= info.static_names
+                merged.static_nums |= info.static_nums
+    return merged
+
+
+def param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args, *a.kwonlyargs)]
+
+
+def positional_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> list[str]:
+    a = fn.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def expr_key(node: ast.expr) -> str | None:
+    """Stable key for a pure Name / attribute chain (``self._buf``).
+
+    ``None`` for anything with calls, subscripts, or literals in it — the
+    rules only track buffers referenced by plain chains.
+    """
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        base = expr_key(node.value)
+        return None if base is None else f"{base}.{node.attr}"
+    return None
+
+
+def attr_chain_root(node: ast.expr) -> ast.expr:
+    """Peel attributes/subscripts: root of ``self.stats.versions[k]``."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    return node
+
+
+def self_field_of(node: ast.expr) -> str | None:
+    """``'stats'`` for any chain rooted at ``self.stats`` (else ``None``)."""
+    chain = node
+    prev = None
+    while isinstance(chain, (ast.Attribute, ast.Subscript)):
+        prev = chain
+        chain = chain.value
+    if (isinstance(chain, ast.Name) and chain.id == "self"
+            and isinstance(prev, ast.Attribute)):
+        return prev.attr
+    return None
+
+
+def assign_target_exprs(stmt: ast.stmt) -> list[ast.expr]:
+    """Flattened assignment targets of an Assign/AugAssign/AnnAssign."""
+    out: list[ast.expr] = []
+
+    def flat(t: ast.expr) -> None:
+        if isinstance(t, (ast.Tuple, ast.List)):
+            for e in t.elts:
+                flat(e)
+        elif isinstance(t, ast.Starred):
+            flat(t.value)
+        else:
+            out.append(t)
+
+    if isinstance(stmt, ast.Assign):
+        for t in stmt.targets:
+            flat(t)
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        flat(stmt.target)
+    return out
+
+
+def walk_statements(body: list[ast.stmt]):
+    """Depth-first statements in lexical order (source order)."""
+    for stmt in body:
+        yield stmt
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.stmt):
+                # handled via the body lists below
+                continue
+        for name in ("body", "orelse", "finalbody", "handlers"):
+            sub = getattr(stmt, name, None)
+            if not sub:
+                continue
+            if name == "handlers":
+                for h in sub:
+                    yield from walk_statements(h.body)
+            else:
+                yield from walk_statements(sub)
+
+
+def functions_in(tree: ast.AST):
+    """Every (async) function definition anywhere in the tree."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def enclosing_with_exprs(fn: ast.AST, target: ast.stmt) -> list[ast.expr]:
+    """Context expressions of every ``with`` lexically enclosing ``target``.
+
+    Computed by a parent-tracking walk from ``fn`` (ASTs carry no parent
+    links).
+    """
+    stack: list[ast.expr] = []
+    found: list[ast.expr] = []
+
+    def visit(node: ast.AST) -> bool:
+        if node is target:
+            found.extend(stack)
+            return True
+        pushed = 0
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            for item in node.items:
+                stack.append(item.context_expr)
+                pushed += 1
+        try:
+            for child in ast.iter_child_nodes(node):
+                # do not descend into nested function/class scopes
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                      ast.ClassDef)) and child is not target:
+                    continue
+                if visit(child):
+                    return True
+        finally:
+            for _ in range(pushed):
+                stack.pop()
+        return False
+
+    visit(fn)
+    return found

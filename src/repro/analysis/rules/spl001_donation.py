@@ -1,0 +1,167 @@
+"""SPL001 — donation safety around in-place ring appends.
+
+Origin bug (PR 4): ``RollingDeviceArchive.append`` donates the (K, C) ring
+buffer into the append dispatch.  A read of the donated buffer *scheduled
+into the same dispatch before the in-place write* makes XLA fall back to
+copying the whole ring — measured ~200x the donated append cost at
+K=32768, T=1008 on CPU.  And a caller that keeps reading the old reference
+*after* the dispatch donated it away is touching a deleted buffer.
+
+Two patterns, both module-local (the rule resolves donating functions from
+``jax.jit``/``functools.partial(jax.jit, donate_argnums=...)`` definitions
+and ``name = jax.jit(f, donate_argnums=...)`` assignments in the same
+file):
+
+1. **pre-write read folded into the donating dispatch** — inside a
+   donating function, a donated parameter that is written in place via
+   ``buf.at[...].set(...)`` may not be read anywhere else in the function
+   body; the evicted column must be materialized in a *separate, earlier*
+   dispatch.
+2. **use after donation** — in a caller, once a buffer expression is
+   passed in a donated position, later reads of the same expression are
+   flagged unless the call's assignment targets rebind that expression
+   (``self._buf, ... = _append_step(self._buf, ...)`` is the sanctioned
+   shape).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import FileContext, Finding, Rule, register
+from . import _ast_util as U
+
+
+def _donating_functions(tree: ast.AST) -> dict[str, set[int]]:
+    """name -> donated positional indices, for this module."""
+    out: dict[str, set[int]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            info = U.jit_info(node)
+            if info.is_jit and info.donate:
+                out[node.name] = info.donate
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            info = U.jit_info_from_call(node.value)
+            if info.is_jit and info.donate and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                out[node.targets[0].id] = info.donate
+    return out
+
+
+def _at_set_base(call: ast.Call) -> ast.expr | None:
+    """``X`` for a ``X.at[...].set(...)`` call, else ``None``."""
+    f = call.func
+    if (isinstance(f, ast.Attribute) and f.attr == "set"
+            and isinstance(f.value, ast.Subscript)
+            and isinstance(f.value.value, ast.Attribute)
+            and f.value.value.attr == "at"):
+        return f.value.value.value
+    return None
+
+
+@register
+class DonationSafety(Rule):
+    rule_id = "SPL001"
+    title = "donation safety (donated-ring read hazards)"
+    rationale = ("PR 4: a pre-write read of a donated ring buffer in the "
+                 "appending dispatch makes XLA copy the whole ring (~200x)")
+    scope = None        # donation is rare; check everywhere it appears
+
+    def check(self, ctx: FileContext):
+        donating = _donating_functions(ctx.tree)
+        yield from self._check_donating_bodies(ctx)
+        if donating:
+            for fn in U.functions_in(ctx.tree):
+                yield from self._check_caller(ctx, fn, donating)
+
+    # -- pattern 1: pre-write read inside the donating dispatch ------------
+
+    def _check_donating_bodies(self, ctx: FileContext):
+        for fn in U.functions_in(ctx.tree):
+            info = U.jit_info(fn)
+            if not (info.is_jit and info.donate):
+                continue
+            pos = U.positional_params(fn)
+            donated = {pos[i] for i in info.donate if i < len(pos)}
+            for name in sorted(donated):
+                writes = []
+                for node in ast.walk(fn):
+                    if isinstance(node, ast.Call):
+                        base = _at_set_base(node)
+                        if isinstance(base, ast.Name) and base.id == name:
+                            writes.append(node)
+                if not writes:
+                    # donated accumulator consumed whole (e.g. the moments
+                    # operand of the stats-update kernel): input/output
+                    # aliasing, no slot write to race with
+                    continue
+                write_names = set()
+                for w in writes:
+                    for sub in ast.walk(w):
+                        if isinstance(sub, ast.Name):
+                            write_names.add(id(sub))
+                for node in ast.walk(fn):
+                    if (isinstance(node, ast.Name) and node.id == name
+                            and isinstance(node.ctx, ast.Load)
+                            and id(node) not in write_names):
+                        yield ctx.finding(
+                            node, self,
+                            f"donated buffer `{name}` is read in the same "
+                            f"dispatch that writes it in place via "
+                            f"`.at[...].set`; materialize the read in a "
+                            f"separate dispatch before the donating call "
+                            f"(PR 4 ring hazard, ~200x)")
+
+    # -- pattern 2: use after donation in callers --------------------------
+
+    def _check_caller(self, ctx: FileContext, fn, donating: dict[str, set[int]]):
+        # lexical statement order; per donated buffer key, the line of the
+        # donating statement (None once rebound)
+        donated_at: dict[str, ast.stmt] = {}
+        for stmt in U.walk_statements(fn.body):
+            # reads of already-donated keys anywhere in this statement
+            for key, site in list(donated_at.items()):
+                for node in ast.walk(stmt):
+                    if isinstance(node, (ast.Name, ast.Attribute)) \
+                            and isinstance(getattr(node, "ctx", None), ast.Load) \
+                            and U.expr_key(node) == key \
+                            and not self._inside_rebinding_call(stmt, key,
+                                                               donating):
+                        yield ctx.finding(
+                            node, self,
+                            f"`{key}` was donated to a dispatch on line "
+                            f"{site.lineno} and may no longer be read; "
+                            f"rebind it from the call's results or read it "
+                            f"before the donating call")
+                        break       # one finding per statement per key
+            # new donations introduced by this statement
+            for call in (n for n in ast.walk(stmt) if isinstance(n, ast.Call)):
+                name = call.func.id if isinstance(call.func, ast.Name) else None
+                if name not in donating:
+                    continue
+                rebound = {U.expr_key(t) for t in U.assign_target_exprs(stmt)}
+                for i in donating[name]:
+                    if i >= len(call.args):
+                        continue
+                    key = U.expr_key(call.args[i])
+                    if key is None or key in rebound:
+                        continue
+                    donated_at[key] = stmt
+            # plain rebinds clear the hazard
+            for t in U.assign_target_exprs(stmt):
+                donated_at.pop(U.expr_key(t), None)
+
+    @staticmethod
+    def _inside_rebinding_call(stmt: ast.stmt, key: str,
+                               donating: dict[str, set[int]]) -> bool:
+        """True when the read of ``key`` in ``stmt`` is the donating call's
+        own argument *and* the statement rebinds ``key`` — the sanctioned
+        `x, ... = f(x, ...)` shape re-donating the fresh buffer."""
+        rebound = {U.expr_key(t) for t in U.assign_target_exprs(stmt)}
+        if key not in rebound:
+            return False
+        for call in (n for n in ast.walk(stmt) if isinstance(n, ast.Call)):
+            name = call.func.id if isinstance(call.func, ast.Name) else None
+            if name in donating and any(
+                    U.expr_key(a) == key for a in call.args):
+                return True
+        return False

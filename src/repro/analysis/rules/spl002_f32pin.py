@@ -1,0 +1,84 @@
+"""SPL002 — explicit dtype pins in modules that must survive ``jax_enable_x64``.
+
+Origin bugs (PRs 2/7): ``greedy_pool_vectorized`` staged float32 data
+through a dtype-defaulting constructor and silently widened to float64
+under ``jax_enable_x64``, breaking bit-parity with the tiled kernel; the
+quantization helpers had the same class of bug (x64 codes != x32 codes)
+until every constructor was pinned.
+
+The mechanizable invariant: in the scoped modules (the serving engine's
+numeric core — scoring, kernels, compression, the stream/serve/shard/
+operator/multicloud layers and the benchmarks), every ``jnp`` array
+*constructor* whose result dtype depends on the x64 flag must carry an
+explicit dtype, either positionally or as ``dtype=``.  ``*_like``
+constructors inherit their dtype and are exempt; ``.astype(float)`` (the
+builtin, i.e. float64-under-x64) is flagged too.
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import FileContext, Rule, register
+
+#: constructor -> index of the positional dtype parameter (None = kw-only)
+_DTYPE_POS = {
+    "zeros": 1, "ones": 1, "empty": 1, "full": 2,
+    "asarray": 1, "array": 1, "arange": 3, "linspace": None, "eye": None,
+    "identity": None,
+}
+#: builtin dtype-ish arguments that widen under x64
+_WIDENING_NAMES = {"float"}
+_WIDENING_STRINGS = {"float", "float64", "f8", "double"}
+
+
+def _jnp_member(func: ast.expr) -> str | None:
+    if (isinstance(func, ast.Attribute) and isinstance(func.value, ast.Name)
+            and func.value.id == "jnp"):
+        return func.attr
+    return None
+
+
+def _has_dtype(call: ast.Call, pos: int | None) -> bool:
+    if any(kw.arg == "dtype" for kw in call.keywords):
+        return True
+    return pos is not None and len(call.args) > pos
+
+
+@register
+class Float32Pin(Rule):
+    rule_id = "SPL002"
+    title = "f32-pin (dtype-defaulting constructors under jax_enable_x64)"
+    rationale = ("PRs 2/7: dtype-defaulting jnp constructors widen to "
+                 "float64 under jax_enable_x64, breaking kernel bit-parity "
+                 "and quantization codes")
+    scope = ("src/repro/core/", "src/repro/kernels/", "src/repro/parallel/",
+             "src/repro/stream/", "src/repro/serve/", "src/repro/shard/",
+             "src/repro/operator/", "src/repro/multicloud/",
+             "src/repro/loadgen/", "benchmarks/")
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            member = _jnp_member(node.func)
+            if member in _DTYPE_POS:
+                if not _has_dtype(node, _DTYPE_POS[member]):
+                    yield ctx.finding(
+                        node, self,
+                        f"`jnp.{member}` without an explicit dtype pin — "
+                        f"the default widens under jax_enable_x64; pass "
+                        f"dtype= (jnp.float32 for archive/stats arrays)")
+                continue
+            # .astype(float) / .astype("float64")
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "astype" and node.args):
+                a = node.args[0]
+                widening = (
+                    (isinstance(a, ast.Name) and a.id in _WIDENING_NAMES)
+                    or (isinstance(a, ast.Constant)
+                        and a.value in _WIDENING_STRINGS))
+                if widening:
+                    yield ctx.finding(
+                        node, self,
+                        "`.astype(float)` is float64 under jax_enable_x64; "
+                        "pin an explicit width (jnp.float32)")

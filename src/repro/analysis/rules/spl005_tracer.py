@@ -1,0 +1,116 @@
+"""SPL005 — tracer hygiene at ``jit`` / ``pallas_call`` boundaries.
+
+Origin discipline (PRs 2/3/4): every kernel in this repo routes shape/mode
+switches (``backend``, ``interpret``, ``precision``, tile sizes) through
+``static_argnames`` and keeps Python control flow off traced operands.  A
+Python ``if``/``for`` on a tracer either raises a ``TracerBoolConversion``
+at an inconvenient time or — worse, for ``for x in traced_array`` —
+silently unrolls the loop into the graph.  A non-hashable argument passed
+in a static position fails at dispatch.
+
+Two patterns, scoped to ``kernels/`` and ``core/``:
+
+1. inside a ``jax.jit``-decorated function, an ``if`` / ``while`` /
+   ternary test or a ``for``-loop iterable that references a **non-static
+   parameter** is flagged (identity tests against ``None`` are exempt —
+   ``if x is None`` never calls ``__bool__`` on a tracer);
+2. a call to a module-local jitted function passing a list / set / dict
+   display as a ``static_argnames`` keyword is flagged (non-hashable
+   static).
+"""
+from __future__ import annotations
+
+import ast
+
+from ..framework import FileContext, Rule, register
+from . import _ast_util as U
+
+
+def _none_identity_names(test: ast.expr) -> set[int]:
+    """ids of Name nodes used only as ``x is (not) None`` — exempt."""
+    out: set[int] = set()
+    for node in ast.walk(test):
+        if isinstance(node, ast.Compare) and len(node.ops) == 1 \
+                and isinstance(node.ops[0], (ast.Is, ast.IsNot)) \
+                and isinstance(node.comparators[0], ast.Constant) \
+                and node.comparators[0].value is None \
+                and isinstance(node.left, ast.Name):
+            out.add(id(node.left))
+    return out
+
+
+@register
+class TracerHygiene(Rule):
+    rule_id = "SPL005"
+    title = "tracer hygiene (Python control flow on traced operands)"
+    rationale = ("PRs 2/3: kernel mode switches must be static_argnames; "
+                 "Python if/for on a tracer raises or silently unrolls")
+    scope = ("src/repro/kernels/", "src/repro/core/")
+
+    def check(self, ctx: FileContext):
+        jitted: dict[str, set[str]] = {}
+        for fn in U.functions_in(ctx.tree):
+            info = U.jit_info(fn)
+            if not info.is_jit:
+                continue
+            jitted[fn.name] = set(info.static_names)
+            yield from self._check_body(ctx, fn, info)
+        if jitted:
+            yield from self._check_static_callsites(ctx, jitted)
+
+    # -- pattern 1: control flow on non-static params ----------------------
+
+    def _check_body(self, ctx: FileContext, fn, info):
+        pos = U.param_names(fn)
+        static = set(info.static_names)
+        static |= {pos[i] for i in info.static_nums if i < len(pos)}
+        traced = [p for p in pos if p not in static and p != "self"]
+        if not traced:
+            return
+        traced_set = set(traced)
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While, ast.IfExp)):
+                yield from self._flag_names(ctx, node.test, traced_set,
+                                            kind="branch test")
+            elif isinstance(node, ast.For):
+                yield from self._flag_names(ctx, node.iter, traced_set,
+                                            kind="loop iterable")
+
+    def _flag_names(self, ctx: FileContext, expr: ast.expr,
+                    traced: set[str], *, kind: str):
+        exempt = _none_identity_names(expr)
+        seen: set[str] = set()
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Lambda, ast.FunctionDef)):
+                return      # closures evaluate later; out of scope
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Load) \
+                    and node.id in traced and id(node) not in exempt \
+                    and node.id not in seen:
+                seen.add(node.id)
+                yield ctx.finding(
+                    node, self,
+                    f"Python {kind} on traced parameter `{node.id}` inside "
+                    f"a jitted function — route it through static_argnames "
+                    f"or use lax.cond/jnp.where")
+
+    # -- pattern 2: non-hashable static arguments --------------------------
+
+    def _check_static_callsites(self, ctx: FileContext,
+                                jitted: dict[str, set[str]]):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call) \
+                    or not isinstance(node.func, ast.Name):
+                continue
+            static = jitted.get(node.func.id)
+            if not static:
+                continue
+            for kw in node.keywords:
+                if kw.arg in static and isinstance(
+                        kw.value, (ast.List, ast.Set, ast.Dict, ast.ListComp,
+                                   ast.SetComp, ast.DictComp)):
+                    yield ctx.finding(
+                        kw.value, self,
+                        f"non-hashable {type(kw.value).__name__.lower()} "
+                        f"passed as static argument `{kw.arg}` of "
+                        f"`{node.func.id}` — static args must be hashable "
+                        f"(use a tuple)")

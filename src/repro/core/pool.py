@@ -159,7 +159,8 @@ def _prefix_allocations(s: jax.Array, c: jax.Array, required: jax.Array,
 
     top = X[:, 0]                                            # (K,) top-ranked alloc per prefix
     newest = jnp.diagonal(X)                                 # (K,) newest member's alloc
-    prev_top = jnp.concatenate([jnp.array([jnp.iinfo(jnp.int32).max]), top[:-1]])
+    prev_top = jnp.concatenate([jnp.array([jnp.iinfo(jnp.int32).max],
+                                          jnp.int32), top[:-1]])
     terminate = (top >= prev_top) | (newest == 0)
     terminate = terminate.at[0].set(newest[0] == 0)          # x_prev_top = inf at k=0
     any_term = jnp.any(terminate)

@@ -13,8 +13,8 @@ def flash_attention_ref(q, k, v, *, scale: float, causal: bool = True):
     qg = q.reshape(B, Sq, KV, G, D)
     s = jnp.einsum("bqkgd,bckd->bqkgc", qg, k).astype(jnp.float32) * scale
     if causal:
-        qpos = jnp.arange(Sq)
-        kpos = jnp.arange(k.shape[1])
+        qpos = jnp.arange(Sq, dtype=jnp.int32)
+        kpos = jnp.arange(k.shape[1], dtype=jnp.int32)
         mask = qpos[:, None] >= kpos[None, :]
         s = jnp.where(mask[None, :, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
@@ -38,7 +38,7 @@ def rwkv6_scan_ref(r, k, v, log_w, u, s0):
         s = jnp.exp(wt)[..., None] * s + a
         return s, out
 
-    s, outs = jax.lax.scan(step, s0, jnp.arange(S))
+    s, outs = jax.lax.scan(step, s0, jnp.arange(S, dtype=jnp.int32))
     return outs.transpose(1, 0, 2, 3), s
 
 
@@ -52,7 +52,8 @@ def rglru_scan_ref(log_a, x_in, h0):
         h = jnp.exp(log_a[:, t]) * h + x_in[:, t]
         return h, h
 
-    h_last, hs = jax.lax.scan(step, h0, jnp.arange(log_a.shape[1]))
+    h_last, hs = jax.lax.scan(step, h0,
+                              jnp.arange(log_a.shape[1], dtype=jnp.int32))
     return hs.transpose(1, 0, 2), h_last
 
 

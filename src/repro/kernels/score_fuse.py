@@ -158,8 +158,8 @@ def cost_min(prices, vcpus, memory_gb, mask, use_cpus, required,
     del tile  # one-shot reduction; kept for signature symmetry
     f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
     total = _tile_total(f32(prices), f32(vcpus), f32(memory_gb),
-                        jnp.asarray(use_cpus), f32(required))
-    return _masked_min(total, jnp.asarray(mask))
+                        jnp.asarray(use_cpus, bool), f32(required))
+    return _masked_min(total, jnp.asarray(mask, bool))
 
 
 def _score_fuse_lax(area, slope, std, prices, vcpus, memory_gb, mask,
@@ -240,7 +240,7 @@ def _score_fuse_pallas(area, slope, std, prices, vcpus, memory_gb, mask,
          mask.astype(jnp.float32)), tile, (0, 0, 0, 1, 1, 1, 0))
     inf = jnp.asarray(jnp.inf, jnp.float32)
     if extrema is None:
-        lo, hi = jnp.full(3, inf), jnp.full(3, -inf)
+        lo, hi = jnp.full(3, inf, jnp.float32), jnp.full(3, -inf, jnp.float32)
     else:
         lo, hi = extrema
     floor = inf if cost_floor is None else jnp.asarray(cost_floor, jnp.float32)
@@ -293,7 +293,8 @@ def score_fuse(area, slope, std, prices, vcpus, memory_gb, mask, use_cpus,
     tile = DEFAULT_TILE if tile is None else tile
     f32 = lambda x: jnp.asarray(x, jnp.float32)  # noqa: E731
     args = (f32(area), f32(slope), f32(std), f32(prices), f32(vcpus),
-            f32(memory_gb), jnp.asarray(mask), jnp.asarray(use_cpus),
+            f32(memory_gb), jnp.asarray(mask, bool),
+            jnp.asarray(use_cpus, bool),
             f32(required), f32(lam), f32(weight),
             None if extrema is None else (f32(extrema[0]), f32(extrema[1])),
             None if cost_floor is None else f32(cost_floor))

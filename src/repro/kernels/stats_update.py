@@ -126,12 +126,13 @@ def moments_from_window(t3, *, scale=None, chunk: int = 65536) -> StreamMoments:
     def pair(x64):
         hi = x64.astype(np.float32)
         lo = (x64 - hi.astype(np.float64)).astype(np.float32)
-        return jnp.asarray(hi), jnp.asarray(lo)
+        return jnp.asarray(hi, jnp.float32), jnp.asarray(lo, jnp.float32)
 
     s0, s0c = pair(s0)
     s1, s1c = pair(s1)
     q, qc = pair(q)
-    return StreamMoments(s0, s0c, s1, s1c, q, qc, jnp.asarray(ref32))
+    return StreamMoments(s0, s0c, s1, s1c, q, qc,
+                         jnp.asarray(ref32, jnp.float32))
 
 
 def _cadd(s, c, x):
@@ -300,7 +301,8 @@ def stats_update(moments: StreamMoments, y_new, y_old, y_first, y_last,
     else:
         # Quantized path: columns stay in their storage dtype end to end;
         # the cast-and-scale happens inside the tile math.
-        cols = tuple(jnp.asarray(y) for y in (y_new, y_old, y_first, y_last))
+        cols = tuple(jnp.asarray(y)  # spotlint: disable=SPL002 (storage dtype)
+                     for y in (y_new, y_old, y_first, y_last))
         scale = f32(scale)
     args = (moments, *cols, f32(length), jnp.asarray(evict, bool), scale)
     if backend is None:

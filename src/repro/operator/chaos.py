@@ -25,6 +25,7 @@ tracked pools) against the availability the recommendations promised.
 """
 from __future__ import annotations
 
+import threading
 import warnings
 from dataclasses import dataclass, field
 
@@ -76,13 +77,16 @@ class FaultInjectedServer:
         self._server = server
         self.armed = False
         self.injected_failures = 0
+        # drain workers and the replay loop race on the counter
+        self._inject_lock = threading.Lock()
 
     def __getattr__(self, name):
         return getattr(self._server, name)
 
     def serve(self, target, requests, **kw):
         if self.armed:
-            self.injected_failures += 1
+            with self._inject_lock:
+                self.injected_failures += 1
             raise RuntimeError("injected dispatch failure (chaos replay)")
         return self._server.serve(target, requests, **kw)
 

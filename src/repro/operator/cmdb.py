@@ -18,6 +18,7 @@ the next sync observes the truth.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -116,17 +117,24 @@ class PoolCMDB:
         self.pools: dict[int, TrackedPool] = {}
         self._by_sig: dict[tuple, int] = {}
         self._next_id = 0
+        # result_sink registration arrives from serving threads while the
+        # reconcile loop iterates; RLock because sync() re-enters via the
+        # active_pools property.
+        self._lock = threading.RLock()
 
     def __len__(self) -> int:
-        return len(self.pools)
+        with self._lock:
+            return len(self.pools)
 
     @property
     def active_pools(self) -> list[TrackedPool]:
-        return [p for p in self.pools.values() if p.active]
+        with self._lock:
+            return [p for p in self.pools.values() if p.active]
 
     @property
     def issued_pools(self) -> list[TrackedPool]:
-        return [p for p in self.pools.values() if not p.active]
+        with self._lock:
+            return [p for p in self.pools.values() if not p.active]
 
     # -- registration ------------------------------------------------------
 
@@ -142,21 +150,22 @@ class PoolCMDB:
         migration planning diffs against, not a replacement roster.
         """
         sig = request.signature()
-        pid = self._by_sig.get(sig)
-        if pid is None:
-            pool = TrackedPool(
-                pool_id=self._next_id, request=request, recommendation=rec,
-                issued_t=now,
-                recommended_availability=recommended_availability(
-                    request, rec, self.catalog))
-            self.pools[self._next_id] = pool
-            self._by_sig[sig] = self._next_id
-            self._next_id += 1
+        with self._lock:
+            pid = self._by_sig.get(sig)
+            if pid is None:
+                pool = TrackedPool(
+                    pool_id=self._next_id, request=request,
+                    recommendation=rec, issued_t=now,
+                    recommended_availability=recommended_availability(
+                        request, rec, self.catalog))
+                self.pools[self._next_id] = pool
+                self._by_sig[sig] = self._next_id
+                self._next_id += 1
+                return pool
+            pool = self.pools[pid]
+            pool.recommendation = rec
+            pool.rerecommendations += 1
             return pool
-        pool = self.pools[pid]
-        pool.recommendation = rec
-        pool.rerecommendations += 1
-        return pool
 
     def adopt(self, pool: TrackedPool, launched, *, now: float) -> None:
         """Promote an issued pool to active with its launched nodes.
@@ -166,13 +175,14 @@ class PoolCMDB:
         fills register exactly what exists.
         """
         use_cpus = pool.request.cpus is not None
-        for node_id, ty, rg, az, score in launched:
-            it = self.catalog.get(ty)
-            pool.members[node_id] = PoolMember(
-                node_id=node_id, type_name=ty, region=rg, az=az,
-                capacity=it.vcpus if use_cpus else it.memory_gb,
-                launch_t=now, launch_score=float(score))
-        pool.active = True
+        with self._lock:
+            for node_id, ty, rg, az, score in launched:
+                it = self.catalog.get(ty)
+                pool.members[node_id] = PoolMember(
+                    node_id=node_id, type_name=ty, region=rg, az=az,
+                    capacity=it.vcpus if use_cpus else it.memory_gb,
+                    launch_t=now, launch_score=float(score))
+            pool.active = True
 
     # -- reconciliation ----------------------------------------------------
 
@@ -187,18 +197,19 @@ class PoolCMDB:
         ``reason``).
         """
         deaths: dict[int, list[PoolMember]] = {}
-        for pool in self.active_pools:
-            for m in pool.members.values():
-                if not m.alive:
-                    continue
-                rec = market.node(m.node_id)
-                if rec.alive:
-                    continue
-                m.end_t = rec.end_t
-                m.reason = rec.reason
-                if rec.reason == "interrupted":
-                    pool.interrupted_total += 1
-                deaths.setdefault(pool.pool_id, []).append(m)
+        with self._lock:
+            for pool in self.active_pools:
+                for m in pool.members.values():
+                    if not m.alive:
+                        continue
+                    rec = market.node(m.node_id)
+                    if rec.alive:
+                        continue
+                    m.end_t = rec.end_t
+                    m.reason = rec.reason
+                    if rec.reason == "interrupted":
+                        pool.interrupted_total += 1
+                    deaths.setdefault(pool.pool_id, []).append(m)
         return deaths
 
     # -- survival-analysis feed --------------------------------------------
@@ -213,14 +224,16 @@ class PoolCMDB:
         ``terminate`` says nothing about the market's hazard).
         """
         x, dur, ev = [], [], []
-        for pool in self.active_pools:
-            for m in pool.members.values():
-                x.append(m.launch_score)
-                end = now if m.alive else m.end_t
-                dur.append(max(end - m.launch_t, 1e-9))
-                ev.append((not m.alive) and m.reason == "interrupted")
+        with self._lock:
+            for pool in self.active_pools:
+                for m in pool.members.values():
+                    x.append(m.launch_score)
+                    end = now if m.alive else m.end_t
+                    dur.append(max(end - m.launch_t, 1e-9))
+                    ev.append((not m.alive) and m.reason == "interrupted")
         return (np.asarray(x, np.float64), np.asarray(dur, np.float64),
                 np.asarray(ev, bool))
 
     def n_interruptions(self) -> int:
-        return sum(p.interrupted_total for p in self.pools.values())
+        with self._lock:
+            return sum(p.interrupted_total for p in self.pools.values())

@@ -128,7 +128,7 @@ def dequantize_window(q, scale, precision: str):
     host (numpy) and device (XLA) decodes agree bit for bit.
     """
     resolve_precision(precision)
-    q = jnp.asarray(q)
+    q = jnp.asarray(q)  # spotlint: disable=SPL002 (codes keep storage dtype)
     if precision == "int8":
         return q.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)[:, None]
     return q.astype(jnp.float32)

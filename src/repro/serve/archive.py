@@ -76,7 +76,7 @@ class DeviceArchive:
                                              headroom=headroom)
         return QuantizedDeviceArchive(
             key=f"{key}#{precision}", host=cands,
-            t3_q=jax.device_put(jnp.asarray(
+            t3_q=jax.device_put(jnp.asarray(  # spotlint: disable=SPL002
                 compression.quantize_window(t3, scale, precision)), device),
             scale=put(scale), precision=precision, **catalog)
 

@@ -210,6 +210,7 @@ class IngestPump:
         self.errors = 0
         self.last_error: BaseException | None = None
         self.ticks_pumped = 0
+        self._stats_lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
 
@@ -221,11 +222,14 @@ class IngestPump:
         while not self._stop.is_set():
             try:
                 self.collect()
-                self.ticks_pumped += self.ingestor.poll()
+                pumped = self.ingestor.poll()
+                with self._stats_lock:
+                    self.ticks_pumped += pumped
             except Exception as e:  # flaky tick: count, keep pumping
-                self.errors += 1
-                if self.last_error is None:
-                    self.last_error = e
+                with self._stats_lock:
+                    self.errors += 1
+                    if self.last_error is None:
+                        self.last_error = e
             if self._stop.wait(self.period):
                 return
 

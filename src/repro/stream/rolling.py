@@ -217,7 +217,9 @@ class RollingDeviceArchive:
         codes = compression.quantize_window(t3, host_scale, self.precision)
         buf = np.zeros((K, capacity), codes.dtype)
         buf[:, :T] = codes
-        self._buf = jax.device_put(jnp.asarray(buf), device)
+        self._buf = jax.device_put(
+            jnp.asarray(buf),  # spotlint: disable=SPL002 (codes dtype)
+            device)
         self._pos = T % capacity
         self._len = T
         self.version = 0
@@ -285,7 +287,7 @@ class RollingDeviceArchive:
         :attr:`version`, and drops the memoised logical window.  Returns
         ``self`` for chaining.
         """
-        col = jnp.asarray(np.asarray(column, np.float32))
+        col = jnp.asarray(np.asarray(column, np.float32), jnp.float32)
         if col.shape != (len(self.host),):
             raise ValueError(
                 f"column shape {col.shape} != ({len(self.host)},)")
@@ -299,12 +301,12 @@ class RollingDeviceArchive:
             self._buf, self._moments, stats = _append_step(
                 self._buf, self._moments, col, y_old, jnp.int32(slot),
                 jnp.int32(new_start), jnp.float32(new_len),
-                jnp.asarray(evict))
+                jnp.asarray(evict, bool))
         else:
             self._buf, self._moments, stats, self._clips = _append_step_q(
                 self._buf, self._moments, self._clips, col, y_old,
                 self.scale, jnp.int32(slot), jnp.int32(new_start),
-                jnp.float32(new_len), jnp.asarray(evict),
+                jnp.float32(new_len), jnp.asarray(evict, bool),
                 precision=self.precision)
         self._pos = (slot + 1) % self.capacity
         self._len = new_len
@@ -358,7 +360,7 @@ class RollingDeviceArchive:
         """
         if self._t3_logical is None:
             order = (self._start + np.arange(self._len)) % self.capacity
-            stored = jnp.take(self._buf, jnp.asarray(order), axis=1)
+            stored = jnp.take(self._buf, jnp.asarray(order, jnp.int32), axis=1)
             self._t3_logical = compression.dequantize_window(
                 stored, self.scale, self.precision) \
                 if self.precision != "float32" else stored

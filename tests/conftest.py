@@ -1,7 +1,28 @@
 import numpy as np
 import pytest
 
+from repro.analysis.racecheck import LockRegistry
+
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def racecheck():
+    """Instrumented-lock registry; fails the test on any race / cycle.
+
+    Tests wire it into real objects via the ``instrument_*`` helpers in
+    ``repro.analysis.racecheck`` *before* starting worker threads, then
+    just run their threaded scenario — teardown asserts zero unguarded
+    writes and zero lock-order cycles.
+    """
+    registry = LockRegistry()
+    try:
+        yield registry
+    finally:
+        problems = registry.problems()
+        registry.close()
+        if problems:
+            pytest.fail("racecheck: " + "; ".join(problems))

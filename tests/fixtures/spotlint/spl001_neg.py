@@ -1,0 +1,22 @@
+"""SPL001-clean counterpart: evicted column read in a separate, earlier
+dispatch, and the caller rebinds the donated buffer from the call's
+results. Expected: zero findings."""
+import functools
+
+import jax
+
+
+@jax.jit
+def read_col(buf, slot):
+    return buf[:, slot]
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def append_step(buf, col, slot):
+    return buf.at[:, slot].set(col)
+
+
+def append(buf, col, slot):
+    y_old = read_col(buf, slot)
+    buf = append_step(buf, col, slot)
+    return buf, y_old

@@ -1,0 +1,16 @@
+"""Deliberate SPL001 violation: the PR 4 donated-ring pre-write read.
+
+The evicted column is read inside the same dispatch that writes the
+donated ring in place — exactly the shape that made XLA copy the whole
+ring. Expected: exactly one SPL001 finding (the `buf[:, slot]` read).
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def append_step(buf, col, slot):
+    y_old = buf[:, slot]
+    new = buf.at[:, slot].set(col)
+    return new, y_old

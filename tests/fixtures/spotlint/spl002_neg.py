@@ -1,0 +1,7 @@
+"""SPL002-clean counterpart: the dtype is pinned explicitly. Expected:
+zero findings."""
+import jax.numpy as jnp
+
+
+def staged_stat(xs):
+    return jnp.asarray(xs, jnp.float32) * 2.0

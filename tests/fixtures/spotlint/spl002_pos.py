@@ -1,0 +1,8 @@
+"""Deliberate SPL002 violation: a staged stat with no explicit dtype —
+under ``jax_enable_x64`` this silently widens to float64. Expected:
+exactly one SPL002 finding."""
+import jax.numpy as jnp
+
+
+def staged_stat(xs):
+    return jnp.asarray(xs) * 2.0

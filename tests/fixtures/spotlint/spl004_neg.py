@@ -1,0 +1,12 @@
+"""SPL004-clean counterpart: every payload mutation bumps the version.
+Expected: zero findings."""
+
+
+class Ring:
+    def __init__(self):
+        self._buf = None
+        self.version = 0
+
+    def append(self, col):
+        self._buf = col
+        self.version += 1

@@ -1,0 +1,15 @@
+"""Deliberate SPL004 violation: a versioned archive class whose append
+mutates the payload without bumping ``self.version``. Expected: exactly
+one SPL004 finding (the ``append`` method)."""
+
+
+class Ring:
+    def __init__(self):
+        self._buf = None
+        self.version = 0
+
+    def reset(self):
+        self.version += 1
+
+    def append(self, col):
+        self._buf = col

@@ -1,0 +1,12 @@
+"""SPL005-clean counterpart: the mode switch is a static argument.
+Expected: zero findings."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("flag",))
+def select(x, flag):
+    if flag:
+        return x
+    return -x

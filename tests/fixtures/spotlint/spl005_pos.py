@@ -1,0 +1,11 @@
+"""Deliberate SPL005 violation: Python branch on a traced parameter
+inside a jitted function. Expected: exactly one SPL005 finding (the
+``flag`` branch test)."""
+import jax
+
+
+@jax.jit
+def select(x, flag):
+    if flag:
+        return x
+    return -x

@@ -1,0 +1,7 @@
+"""A real SPL002 violation silenced by a suppression comment. Expected:
+zero findings (and exactly one if the comment is stripped)."""
+import jax.numpy as jnp
+
+
+def staged_stat(xs):
+    return jnp.asarray(xs) * 2.0  # spotlint: disable=SPL002

@@ -422,3 +422,25 @@ def test_operator_daemon_thread_lifecycle():
     finally:
         op.stop()
     assert not op.running
+
+
+def test_chaos_replay_under_racecheck_is_clean(racecheck):
+    """The full fault menu, with every serving/operator lock instrumented:
+    zero unguarded stats writes and zero lock-order cycles (the ISSUE's
+    dynamic-sanitizer acceptance over the operator suite)."""
+    from repro.analysis.racecheck import (instrument_admission_queue,
+                                          instrument_cmdb,
+                                          instrument_fault_server,
+                                          instrument_server)
+    sched = ChaosSchedule(
+        collector_outages=frozenset({2}), delayed_ticks=frozenset({4}),
+        reclaims={1: 4, 5: 6}, failing_drains=frozenset({3}))
+    rep = ChaosReplay(seed=7, n_targets=24, window=6, warmup_cycles=6,
+                      cycles=8, schedule=sched)
+    instrument_server(racecheck, rep.server)
+    instrument_fault_server(racecheck, rep.faulty)
+    instrument_admission_queue(racecheck, rep.queue)
+    instrument_cmdb(racecheck, rep.operator.cmdb)
+    report = rep.run("racecheck")
+    assert report.stranded_tickets == 0 and report.worker_alive_at_end
+    assert racecheck.problems() == []

@@ -1,0 +1,130 @@
+"""spotlint contract tests: the fixture corpus pins each rule's behavior.
+
+Every SPL rule has a deliberate-violation fixture (exactly one finding,
+with the right rule id) and a clean counterpart (zero findings) under
+``tests/fixtures/spotlint/`` — re-introducing the origin bug of any rule
+must keep producing exactly that finding.  The CLI's JSON schema and
+exit-code contract are pinned here too (the CI lint lane depends on both).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import check_file, check_source, main, run_paths
+from repro.analysis.framework import JSON_SCHEMA_VERSION
+
+FIXTURES = Path(__file__).parent / "fixtures" / "spotlint"
+ALL_RULES = ("SPL001", "SPL002", "SPL003", "SPL004", "SPL005")
+
+
+def _scan(path):
+    findings, _ = run_paths([path], include_fixtures=True)
+    return findings
+
+
+# -- per-rule fixtures: one finding each, right id; clean twin is clean ----
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_positive_fixture_yields_exactly_one_finding(rule):
+    findings = _scan(FIXTURES / f"{rule.lower()}_pos.py")
+    assert len(findings) == 1, findings
+    assert findings[0].rule == rule
+
+
+@pytest.mark.parametrize("rule", ALL_RULES)
+def test_negative_fixture_is_clean(rule):
+    assert _scan(FIXTURES / f"{rule.lower()}_neg.py") == []
+
+
+def test_reintroduced_ring_read_is_spl001():
+    # acceptance pin (a): the PR 4 donated-ring pre-write read
+    findings = _scan(FIXTURES / "spl001_pos.py")
+    assert [f.rule for f in findings] == ["SPL001"]
+    assert "donated" in findings[0].message
+
+
+def test_reintroduced_unpinned_stat_is_spl002():
+    # acceptance pin (b): an x64-widening stat with no dtype pin
+    findings = _scan(FIXTURES / "spl002_pos.py")
+    assert [f.rule for f in findings] == ["SPL002"]
+    assert "dtype" in findings[0].message
+
+
+def test_reintroduced_unguarded_stats_write_is_spl003():
+    # acceptance pin (c): a ServeStats write outside the stats lock
+    findings = _scan(FIXTURES / "spl003_pos.py")
+    assert [f.rule for f in findings] == ["SPL003"]
+    assert "_stats_lock" in findings[0].message
+
+
+# -- suppression comments --------------------------------------------------
+
+def test_suppression_comment_silences_the_line():
+    assert _scan(FIXTURES / "suppressed.py") == []
+
+
+def test_stripping_the_suppression_restores_the_finding():
+    src = (FIXTURES / "suppressed.py").read_text()
+    stripped = src.replace("  # spotlint: disable=SPL002", "")
+    assert stripped != src
+    findings = check_source(stripped, "fixtures/spotlint/suppressed.py")
+    assert [f.rule for f in findings] == ["SPL002"]
+
+
+def test_disable_all_silences_every_rule():
+    src = (FIXTURES / "spl002_pos.py").read_text()
+    silenced = src.replace("* 2.0", "* 2.0  # spotlint: disable=all")
+    assert check_source(silenced, "fixtures/spotlint/x.py") == []
+
+
+# -- corpus hygiene: the default walker never gates on fixtures ------------
+
+def test_default_walk_skips_the_fixture_corpus():
+    findings, n_files = run_paths([FIXTURES])
+    assert findings == [] and n_files == 0
+
+
+def test_directly_named_file_is_always_scanned():
+    assert [f.rule for f in check_file(FIXTURES / "spl004_pos.py")] \
+        == ["SPL004"]
+
+
+# -- CLI: JSON schema and exit-code contract -------------------------------
+
+def test_json_output_schema(capsys):
+    rc = main(["--json", "--include-fixtures",
+               str(FIXTURES / "spl002_pos.py")])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert doc["tool"] == "spotlint"
+    assert doc["schema"] == JSON_SCHEMA_VERSION == 1
+    assert doc["files_scanned"] == 1
+    assert doc["counts"] == {"SPL002": 1}
+    (finding,) = doc["findings"]
+    assert set(finding) == {"path", "line", "col", "rule", "message"}
+    assert finding["rule"] == "SPL002" and finding["line"] >= 1
+
+
+def test_check_exit_codes(capsys):
+    dirty = str(FIXTURES / "spl002_pos.py")
+    clean = str(FIXTURES / "spl002_neg.py")
+    assert main(["--check", "--include-fixtures", dirty]) == 1
+    assert main(["--check", "--include-fixtures", clean]) == 0
+    assert main([dirty, "--include-fixtures"]) == 0      # advisory mode
+    assert main(["--rules", "SPL999", dirty]) == 2       # unknown rule
+    assert main(["--check", "no/such/path.py"]) == 2
+    capsys.readouterr()
+
+
+def test_rule_subset_filter():
+    findings, _ = run_paths([FIXTURES / "spl002_pos.py"],
+                            only=["SPL001"], include_fixtures=True)
+    assert findings == []
+
+
+def test_tree_is_lint_clean():
+    # the CI gate's exact invocation must pass on the committed tree
+    root = Path(__file__).resolve().parents[1]
+    paths = [str(root / d) for d in ("src", "tests", "benchmarks")]
+    assert main(["--check", *paths]) == 0

@@ -411,7 +411,8 @@ def test_ingestor_invalidates_stale_key_before_mutating():
     assert trace == [("invalidate", "order@v0"), ("put", "order@v1")]
 
 
-def test_threaded_admission_resolves_every_ticket_exactly_once(monkeypatch):
+def test_threaded_admission_resolves_every_ticket_exactly_once(monkeypatch,
+                                                               racecheck):
     """Wall-clock worker + concurrent submitters: every ticket resolves
     exactly once, and the stats ledgers balance across the admission queue
     and the (now lock-guarded) BatchServer counters."""
@@ -435,7 +436,12 @@ def test_threaded_admission_resolves_every_ticket_exactly_once(monkeypatch):
     ing.prime()
     server = BatchServer(RecommendationEngine(EngineConfig(score_impl="tiled")),
                          bucket_sizes=(1, 4, 8))
-    q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.005).start()
+    from repro.analysis.racecheck import (instrument_admission_queue,
+                                          instrument_server)
+    q = AdmissionQueue(server, lambda: ing.archive, max_wait_s=0.005)
+    instrument_server(racecheck, server)
+    instrument_admission_queue(racecheck, q)
+    q.start()
     n_threads, per_thread = 4, 6
     tickets: list = []
     tickets_lock = threading.Lock()
